@@ -1,0 +1,231 @@
+"""One benchmark per paper figure (pSPICE §IV-B).
+
+Each function returns a list of row-dicts and is invoked by benchmarks.run.
+Streams are synthetic but statistically shaped like the paper's datasets
+(repro/data/streams.py); match probability is controlled exactly the way the
+paper controls it (window size for Q1/Q2, pattern size for Q3/Q4).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.cep import runner
+from repro.data import streams
+
+from repro.configs.pspice_paper import COST
+SHEDDERS = (eng.SHED_PSPICE, eng.SHED_PMBL, eng.SHED_EBL)
+
+
+def _stock(n, seed=1, p_class=0.03):
+    return streams.gen_stock(n, num_symbols=500, pattern_symbols=10,
+                             hot_fraction=0.9, p_class=p_class, seed=seed)
+
+
+def _run(specs, raw, rate_multiplier=1.2, shedders=SHEDDERS, **kw):
+    args = dict(COST, max_pms=128, bin_size=64, latency_bound=1.0)
+    args.update(kw)
+    return runner.run_experiment(specs, raw, shedders=shedders,
+                                 rate_multiplier=rate_multiplier, **args)
+
+
+def _rows(fig, query, xlabel, xval, res, wall):
+    rows = []
+    for name, r in res.items():
+        rows.append({
+            "figure": fig, "query": query, xlabel: xval, "shedder": name,
+            "fn_pct": round(100 * r.fn, 2),
+            "match_prob": round(r.match_probability, 4),
+            "gt_complex": float(r.ground_truth.complex_count.sum()),
+            "pms_shed": r.result.pms_shed,
+            "ebl_dropped": r.result.ebl_dropped,
+            "max_l_e": round(float(r.result.l_e.max()), 4),
+            "lb_violation_frac": round(
+                float((r.result.l_e > 1.01).mean()), 5),
+            "wall_s": round(wall, 1),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 — impact of match probability (FN% vs matchP per query × shedder)
+# ---------------------------------------------------------------------------
+
+def fig5_match_probability(quick: bool = False):
+    rows = []
+    ws_list = [2000, 3000, 4000, 6000, 8000] if not quick else [2000, 6000]
+    for ws in ws_list:                                     # Q1
+        n = 100_000 if ws <= 3000 and not quick else 60_000
+        t0 = time.time()
+        res = _run([pat.make_q1(ws, num_symbols=10)], _stock(n))
+        rows += _rows("fig5a", "Q1", "window_size", ws, res,
+                      time.time() - t0)
+    ws_list = [3000, 4500, 6000, 9000, 12000] if not quick else [4000]
+    for ws in ws_list:                                     # Q2 (repetition)
+        t0 = time.time()
+        res = _run([pat.make_q2(ws)], _stock(60_000, seed=2))
+        rows += _rows("fig5b", "Q2", "window_size", ws, res,
+                      time.time() - t0)
+    n_list = [2, 3, 4, 5, 6] if not quick else [4]
+    for n_def in n_list:                                   # Q3 (seq+any)
+        t0 = time.time()
+        raw = streams.gen_soccer(60_000, p_striker=0.004, p_defend=0.006,
+                                 seed=3)
+        res = _run([pat.make_q3(any_n=n_def, window_size=1500)], raw,
+                   max_any_ids=8)
+        rows += _rows("fig5c", "Q3", "pattern_size", n_def, res,
+                      time.time() - t0)
+    n_list = [2, 3, 4, 5, 7] if not quick else [3]
+    for n_bus in n_list:                                   # Q4 (any)
+        t0 = time.time()
+        raw = streams.gen_bus(60_000, p_delay=0.02, seed=4)
+        res = _run([pat.make_q4(any_n=n_bus, window_size=3000, slide=500)],
+                   raw, max_any_ids=8, ring_size=6)
+        rows += _rows("fig5d", "Q4", "pattern_size", n_bus, res,
+                      time.time() - t0)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 — impact of input event rate (120%..200% of max throughput)
+# ---------------------------------------------------------------------------
+
+def fig6_event_rate(quick: bool = False):
+    rows = []
+    rates = [1.2, 1.4, 1.6, 1.8, 2.0] if not quick else [1.2, 1.8]
+    for mult in rates:                                     # Q1 @ moderate mP
+        t0 = time.time()
+        res = _run([pat.make_q1(3000, num_symbols=10)], _stock(60_000),
+                   rate_multiplier=mult)
+        rows += _rows("fig6a", "Q1", "rate_pct", int(mult * 100), res,
+                      time.time() - t0)
+    for mult in rates:                                     # Q3 @ low mP
+        t0 = time.time()
+        raw = streams.gen_soccer(60_000, p_striker=0.004, p_defend=0.006,
+                                 seed=3)
+        res = _run([pat.make_q3(any_n=5, window_size=1500)], raw,
+                   rate_multiplier=mult, max_any_ids=8)
+        rows += _rows("fig6b", "Q3", "rate_pct", int(mult * 100), res,
+                      time.time() - t0)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — maintaining the latency bound (l_e trace under overload)
+# ---------------------------------------------------------------------------
+
+def fig7_latency_bound(quick: bool = False):
+    rows = []
+    for mult, tag in ((1.2, "R1"), (1.4, "R2")):
+        t0 = time.time()
+        res = _run([pat.make_q2(6000)], _stock(60_000, seed=2),
+                   rate_multiplier=mult, shedders=(eng.SHED_PSPICE,))
+        r = res[eng.SHED_PSPICE]
+        le = r.result.l_e
+        # decimated trace for the report
+        dec = le[:: max(1, len(le) // 200)]
+        rows.append({
+            "figure": "fig7", "query": "Q2", "rate": tag,
+            "max_l_e": round(float(le.max()), 4),
+            "p99_l_e": round(float(np.percentile(le, 99)), 4),
+            "violation_frac": round(float((le > 1.01).mean()), 5),
+            "trace_head": [round(float(x), 3) for x in dec[:20]],
+            "wall_s": round(time.time() - t0, 1),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — impact of the processing-time term (pSPICE vs pSPICE--)
+# ---------------------------------------------------------------------------
+
+def fig8_processing_time(quick: bool = False):
+    rows = []
+    factors = [1, 2, 4, 8, 12, 16] if not quick else [1, 16]
+    for f in factors:
+        # Q1 and Q2 in ONE multi-query operator; Q1's per-PM match cost is
+        # f× Q2's (the paper's tau_Q1/tau_Q2 knob); both weight 1.
+        specs = [pat.make_q1(4000, num_symbols=10, proc_cost=float(f)),
+                 pat.make_q2(4000, proc_cost=1.0)]
+        raw = _stock(60_000, seed=5)
+        for use_tau, name in ((True, "pspice"), (False, "pspice--")):
+            t0 = time.time()
+            res = _run(specs, raw, shedders=(eng.SHED_PSPICE,),
+                       use_remaining_time=use_tau)
+            r = res[eng.SHED_PSPICE]
+            rows.append({
+                "figure": "fig8", "variant": name, "tau_factor": f,
+                "fn_pct": round(100 * r.fn, 2),
+                "match_prob": round(r.match_probability, 4),
+                "wall_s": round(time.time() - t0, 1),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — shedding overhead + model-build time
+# ---------------------------------------------------------------------------
+
+def fig9_overhead(quick: bool = False):
+    rows = []
+    ws_list = [2000, 4000, 8000] if not quick else [2000]
+    for ws in ws_list:
+        res = _run([pat.make_q1(ws, num_symbols=10)], _stock(60_000))
+        for name, r in res.items():
+            # overhead := simulated shed time / total operator busy time
+            if name == eng.SHED_EBL:
+                shed_time = r.result.ebl_dropped * COST["c_ebl"]
+            else:
+                shed_time = (r.result.shed_calls * COST["c_shed_base"]
+                             + r.result.pms_shed * COST["c_shed_pm"])
+            total = float(r.result.l_e.shape[0]) * COST["c_base"] \
+                + float(r.result.n_pm.mean()) * COST["c_match"] \
+                * r.result.l_e.shape[0]
+            rows.append({
+                "figure": "fig9a", "query": "Q1", "window_size": ws,
+                "shedder": name,
+                "overhead_pct": round(100 * shed_time / total, 3),
+            })
+    # model-build wall time vs window size (value-iteration cost)
+    from repro.core import markov, utility
+    import jax.numpy as jnp
+    for ws in ([6000, 12000, 24000, 32000] if not quick else [6000]):
+        m = 11
+        rng = np.random.default_rng(0)
+        T = rng.random((m, m))
+        T /= T.sum(1, keepdims=True)
+        T = jnp.asarray(T, jnp.float32)
+        R = jnp.asarray(rng.random((m, m)), jnp.float32)
+        t0 = time.time()
+        ut = utility.build_utility_table(T, R, window_size=ws, bin_size=64)
+        ut.table.block_until_ready()
+        rows.append({"figure": "fig9b", "window_size": ws,
+                     "model_build_s": round(time.time() - t0, 3)})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: pSPICE-on-serving benchmark
+# ---------------------------------------------------------------------------
+
+def serving_shed(quick: bool = False):
+    from repro.serving.scheduler import (SchedulerConfig, run_simulation,
+                                         synth_workload)
+    rows = []
+    rates = [80.0, 120.0, 160.0] if not quick else [120.0]
+    for rate in rates:
+        for pol in ("pspice", "random", "admission"):
+            cfg = SchedulerConfig(policy=pol, max_slots=48, slo=1.5)
+            reqs = synth_workload(600 if quick else 1000, rate=rate,
+                                  cfg=cfg, seed=3)
+            t0 = time.time()
+            m = run_simulation(cfg, reqs)
+            rows.append({"figure": "serving", "policy": pol, "rate": rate,
+                         "goodput": round(m["goodput"], 4),
+                         "completed": m["completed"],
+                         "evictions": m["evictions"],
+                         "wall_s": round(time.time() - t0, 1)})
+    return rows

@@ -1,0 +1,68 @@
+"""Build the EXPERIMENTS.md §Perf before/after table from the baseline
+(dryrun_v2.jsonl) and hillclimb (hillclimb.jsonl) rows."""
+from __future__ import annotations
+
+import json
+import sys
+
+from make_report import fmt_s, load  # noqa: E402
+
+CLIMBS = [
+    ("H1 qwen train: TP+FSDP → pure FSDP",
+     ("qwen1.5-110b", "train_4k", "single"), {"scheme": "fsdp"},
+     "collective_s"),
+    ("H2 minitron train: attention batch-flip",
+     ("minitron-4b", "train_4k", "single"), {"attn_flip": True},
+     "compute_s"),
+    ("H3 deepseek-v3 decode: 2-D expert sharding",
+     ("deepseek-v3-671b", "decode_32k", "single"), {"scheme": "moe2d"},
+     "collective_s"),
+    ("H4 internlm prefill: triangle flash (baseline=OFF)",
+     ("internlm2-1.8b", "prefill_32k", "single"), {"causal_skip": False},
+     "compute_s"),
+]
+
+
+def find(rows, key, flags=None):
+    out = None
+    for r in rows:
+        if (r["arch"], r["shape"], r["mesh"]) != key:
+            continue
+        if flags is not None:
+            if all(r.get(k) == v for k, v in flags.items()):
+                out = r
+        else:
+            out = r
+    return out
+
+
+def main():
+    base = load(sys.argv[1] if len(sys.argv) > 1
+                else "results/dryrun_v2.jsonl")
+    climb = load(sys.argv[2] if len(sys.argv) > 2
+                 else "results/hillclimb.jsonl")
+    print("| climb | term | before | after | Δ | dominant before→after | "
+          "useful_ratio |")
+    print("|---|---|---|---|---|---|---|")
+    for name, key, flags, term in CLIMBS:
+        b = find(base, key)
+        c = find(climb, key, flags)
+        if not b or not c or term not in b or term not in c:
+            print(f"| {name} | {term} | — | — | pending | | |")
+            continue
+        # H4 is inverted: the hillclimb row IS the baseline (skip off).
+        if name.startswith("H4"):
+            b, c = c, b
+        delta = b[term] / max(c[term], 1e-12)
+        print(f"| {name} | {term} | {fmt_s(b[term])} | {fmt_s(c[term])} | "
+              f"**{delta:.2f}×** | {b.get('dominant')}→{c.get('dominant')} | "
+              f"{b.get('useful_ratio', 0):.3f}→{c.get('useful_ratio', 0):.3f} |")
+        for t in ("compute_s", "memory_s", "collective_s"):
+            if t != term:
+                print(f"|   · {t} | | {fmt_s(b.get(t))} | {fmt_s(c.get(t))} "
+                      f"| {b.get(t, 0) / max(c.get(t, 1e-12), 1e-12):.2f}× | | |")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, "results")
+    main()

@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the sweep
+jsonl (+ optional hillclimb rows)."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    rows = []
+    for line in open(path):
+        line = line.strip()
+        if not line or line == "DONE":
+            continue
+        rows.append(json.loads(line))
+    # dedupe (arch, shape, mesh) keeping the LAST occurrence (re-runs win)
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(seen.values())
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | chips | status | peak GB/dev | compile |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = r.get("memory_analysis", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('chips', '—')} | {r['status']}"
+            f"{(' (' + r.get('reason', '')[:40] + ')') if r['status'] == 'skipped' else ''} | "
+            f"{mem.get('peak_gb', 0):.1f} | {r.get('compile_s', '—')}s |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "MODEL_FLOPs/HLO_FLOPs | note |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "single" or r["status"] != "ok" \
+           or "compute_s" not in r:
+            continue
+        ratio = r.get("useful_ratio", 0)
+        note = ""
+        if r["shape"].startswith(("decode", "long")):
+            note = "decode: MODEL_FLOPS excl. attention-over-cache"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {ratio:.3f} | {note} |")
+    return "\n".join(out)
+
+
+def summarize(rows):
+    ok = [r for r in rows if r["status"] == "ok"]
+    sk = [r for r in rows if r["status"] == "skipped"]
+    bad = [r for r in rows if r["status"] not in ("ok", "skipped")]
+    return (f"{len(ok)} compiled ok, {len(sk)} skipped (per the "
+            f"applicability rules), {len(bad)} failed")
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1
+                else "results/dryrun_baseline.jsonl")
+    for extra in sys.argv[2:]:
+        extras = load(extra)
+        merged = {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
+        for r in extras:
+            merged[(r["arch"], r["shape"], r["mesh"])] = r
+        rows = list(merged.values())
+    print("## Summary:", summarize(rows))
+    print()
+    print(dryrun_table(rows))
+    print()
+    print("## Roofline (single-pod)")
+    print(roofline_table(rows))

@@ -1,0 +1,527 @@
+"""Vectorized CEP operator with pSPICE load shedding (paper §III).
+
+The operator keeps a fixed-capacity dense PM store per pattern and advances
+EVERY active PM against each incoming event in one vectorized step; the whole
+stream is one ``lax.scan``.  Latency is tracked with a deterministic
+simulated-time model calibrated against the real (wall-clock) cost of the
+jitted engine — see DESIGN.md §3 "Wall-clock latency → simulated-time model".
+
+Per event step (order matters, mirrors the paper's operator):
+  1. expire PMs whose window closed,
+  2. overload check (Alg. 1) → optional shed (Alg. 2 / PM-BL) via lax.cond,
+  3. E-BL input-drop decision (black-box baseline only),
+  4. advance PMs (SEQ table lookup / ANY distinct count), detect completions,
+  5. spawn PMs (window-open events / slide-window ring),
+  6. gather <q, s, s', t> observations (model-building phase),
+  7. advance simulated time, record latency telemetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cep import patterns as pat
+from repro.core import overload as ovl
+from repro.core import shedder as shd
+
+Array = jax.Array
+
+SHED_NONE, SHED_PSPICE, SHED_PMBL, SHED_EBL = "none", "pspice", "pmbl", "ebl"
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static (hashable) engine configuration — one jit cache entry each."""
+    num_patterns: int
+    max_states: int          # M (padded)
+    max_classes: int         # C (padded), classes 0..C
+    max_pms: int = 2048      # N PM slots per pattern
+    max_any_ids: int = 8     # distinctness-set capacity for ANY patterns
+    ring_size: int = 8       # open-window ring for SPAWN_IN_WINDOWS
+    latency_bound: float = 1.0
+    safety_buffer: float = 0.0
+    # Simulated-time cost model (seconds). The paper's operator load comes
+    # from matching events against PMs (c_match · n_pm, scaled per pattern by
+    # proc_cost) plus per-event window/bookkeeping cost c_base; shedding costs
+    # c_shed_base + c_shed_pm · n_pm (the sort); E-BL pays c_ebl per dropped
+    # event.
+    c_base: float = 2e-6
+    c_match: float = 1e-7
+    c_shed_base: float = 5e-6
+    c_shed_pm: float = 5e-9
+    c_ebl: float = 5e-7
+    gather_stats: bool = False
+    shedder: str = SHED_NONE
+    # E-BL drop-fraction controller: model-based feedforward (drop enough to
+    # match the arrival rate) + backlog-proportional term, with decay when
+    # not overloaded.
+    ebl_backlog_gain: float = 0.5
+    ebl_decay: float = 0.997
+    # When the drop budget exceeds what low-utility types can supply, the
+    # remainder spreads uniformly across all types (He et al.'s weighted
+    # sampling degrades toward uniform under pressure): effective priority
+    # = floor + (1-floor)·raw.
+    ebl_floor: float = 0.25
+
+    @property
+    def flat_pms(self) -> int:
+        return self.num_patterns * self.max_pms
+
+
+class EngineModel(NamedTuple):
+    """Learned / compiled array-valued inputs (a pytree; not static)."""
+    trans: Array          # (P, M, C+1) int32
+    kind: Array           # (P,) int32
+    spawn_mode: Array     # (P,) int32
+    window_size: Array    # (P,) int32
+    slide: Array          # (P,) int32
+    final_state: Array    # (P,) int32
+    proc_cost: Array      # (P,) float32 — relative match cost multiplier
+    uses_binding: Array   # (P,) bool
+    spawn_counts: Array   # (P,) bool — ANY spawn consumes the first match
+    # pSPICE utility tables (stacked across patterns) + latency regressions.
+    ut_tables: Array      # (P, B, M) float32
+    ut_bins: Array        # (P,) int32
+    f_model: ovl.LatencyModel
+    g_model: ovl.LatencyModel
+    # E-BL per-event raw drop priority (1 - normalized type utility).
+    ebl_raw_mean: Array   # scalar float32
+
+
+class EventBatch(NamedTuple):
+    """Per-event classified inputs (precomputed by the data layer)."""
+    ev_class: Array    # (n, P) int32 — class per pattern (0 = irrelevant)
+    ev_bind: Array     # (n, P) int32 — binding value per pattern (-1 = none)
+    ev_open: Array     # (n, P) bool  — window-open flag per pattern
+    ev_id: Array       # (n,)  int32  — distinctness id (ANY patterns)
+    ev_rand: Array     # (n,)  float32 — u(0,1) for E-BL sampling
+    ebl_raw: Array     # (n,)  float32 — E-BL raw drop priority per event
+    arrival: Array     # (n,)  float32 — arrival time (seconds)
+
+
+class PMStore(NamedTuple):
+    active: Array     # (P, N) bool
+    state: Array      # (P, N) int32
+    open_idx: Array   # (P, N) int32 — event index at window open
+    bind: Array       # (P, N) int32
+    idset: Array      # (P, N, A) int32 — matched distinct ids (ANY), -1 empty
+
+
+class Carry(NamedTuple):
+    pms: PMStore
+    ring: Array          # (P, K) int32 window-open indices (-1 = empty)
+    ring_ptr: Array      # (P,) int32
+    sim_time: Array      # scalar f32
+    key: Array           # PRNG key
+    ebl_frac: Array      # scalar f32 — E-BL current drop fraction
+    ema_gap: Array       # scalar f32 — EMA of inter-arrival gap (1/rate)
+    prev_arrival: Array  # scalar f32
+    # accumulators
+    complex_count: Array  # (P,) f32
+    pms_created: Array    # (P,) f32
+    pms_shed: Array       # scalar f32
+    shed_calls: Array     # scalar f32
+    overflow: Array       # scalar f32 — spawns lost to a full store
+    ebl_dropped: Array    # scalar f32
+    obs_counts: Array     # (P, M, M) f32 transition counts
+    obs_rewards: Array    # (P, M, M) f32 summed transition times
+    lat_samples_n: Array  # (S,) f32  (n_pm, l_p) samples for fitting f
+    lat_samples_l: Array  # (S,) f32
+    lat_ptr: Array        # scalar int32
+
+
+class StepOut(NamedTuple):
+    l_e: Array       # realized event latency (s)
+    n_pm: Array      # total active PMs after the step
+    shed: Array      # bool — shed triggered at this event
+    dropped: Array   # bool — event dropped by E-BL
+
+
+# ---------------------------------------------------------------------------
+# Engine construction
+# ---------------------------------------------------------------------------
+
+def make_model(cp: pat.CompiledPatterns, cfg: EngineConfig,
+               ut_tables: Array | None = None, ut_bins: Array | None = None,
+               f_model: ovl.LatencyModel | None = None,
+               g_model: ovl.LatencyModel | None = None,
+               ebl_raw_mean: float = 0.5) -> EngineModel:
+    P, M = cp.num_patterns, cp.max_states
+    num_bins = 1 if ut_tables is None else ut_tables.shape[1]
+    if ut_tables is None:
+        ut_tables = jnp.ones((P, num_bins, M), jnp.float32)
+    if ut_bins is None:
+        ut_bins = jnp.ones((P,), jnp.int32)
+    ident = ovl.LatencyModel(a=jnp.float32(cfg.c_match),
+                             b=jnp.float32(cfg.c_base),
+                             kind=jnp.int32(ovl.LINEAR))
+    g_ident = ovl.LatencyModel(a=jnp.float32(cfg.c_shed_pm),
+                               b=jnp.float32(cfg.c_shed_base),
+                               kind=jnp.int32(ovl.LINEAR))
+    return EngineModel(
+        trans=jnp.asarray(cp.trans), kind=jnp.asarray(cp.kind),
+        spawn_mode=jnp.asarray(cp.spawn_mode),
+        window_size=jnp.asarray(cp.window_size),
+        slide=jnp.asarray(cp.slide),
+        final_state=jnp.asarray(cp.final_state),
+        proc_cost=jnp.asarray(cp.proc_cost),
+        uses_binding=jnp.asarray(cp.uses_binding),
+        spawn_counts=jnp.asarray(cp.spawn_counts),
+        ut_tables=jnp.asarray(ut_tables), ut_bins=jnp.asarray(ut_bins),
+        f_model=f_model if f_model is not None else ident,
+        g_model=g_model if g_model is not None else g_ident,
+        ebl_raw_mean=jnp.float32(ebl_raw_mean),
+    )
+
+
+def init_carry(cfg: EngineConfig, seed: int = 0,
+               lat_capacity: int = 4096) -> Carry:
+    P, N, M, A, K = (cfg.num_patterns, cfg.max_pms, cfg.max_states,
+                     cfg.max_any_ids, cfg.ring_size)
+    pms = PMStore(
+        active=jnp.zeros((P, N), bool),
+        state=jnp.zeros((P, N), jnp.int32),
+        open_idx=jnp.zeros((P, N), jnp.int32),
+        bind=jnp.full((P, N), -1, jnp.int32),
+        idset=jnp.full((P, N, A), -1, jnp.int32),
+    )
+    z = jnp.float32(0.0)
+    return Carry(
+        pms=pms,
+        ring=jnp.full((P, K), -1, jnp.int32),
+        ring_ptr=jnp.zeros((P,), jnp.int32),
+        sim_time=z, key=jax.random.PRNGKey(seed), ebl_frac=z,
+        ema_gap=jnp.float32(1e-3), prev_arrival=z,
+        complex_count=jnp.zeros((P,), jnp.float32),
+        pms_created=jnp.zeros((P,), jnp.float32),
+        pms_shed=z, shed_calls=z, overflow=z, ebl_dropped=z,
+        obs_counts=jnp.zeros((P, M, M), jnp.float32),
+        obs_rewards=jnp.zeros((P, M, M), jnp.float32),
+        lat_samples_n=jnp.zeros((lat_capacity,), jnp.float32),
+        lat_samples_l=jnp.zeros((lat_capacity,), jnp.float32),
+        lat_ptr=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One event step
+# ---------------------------------------------------------------------------
+
+def _advance(cfg: EngineConfig, model: EngineModel, pms: PMStore,
+             ev_class: Array, ev_bind: Array, ev_id: Array):
+    """Advance all active PMs against one event.  Returns (pms, old_state,
+    new_state, completed_per_pattern)."""
+    P, N = cfg.num_patterns, cfg.max_pms
+    c = ev_class[:, None]                      # (P,1)
+    b = ev_bind[:, None]
+    bind_ok = jnp.where(model.uses_binding[:, None], pms.bind == b, True)
+    c_eff = jnp.where(bind_ok, c, 0)
+
+    # SEQ: dense table lookup trans[p, state, c_eff].
+    seq_next = jnp.take_along_axis(
+        jnp.take_along_axis(model.trans, pms.state[:, :, None],
+                            axis=2 - 1),  # gather over states → (P,N,C+1)
+        c_eff[..., None].astype(jnp.int32), axis=2)[..., 0]
+
+    # ANY: distinct-count advance.
+    in_set = (pms.idset == ev_id).any(axis=-1)            # (P, N)
+    final = model.final_state[:, None]
+    any_match = (c_eff == 1) & ~in_set & (pms.state < final)
+    any_next = pms.state + any_match.astype(jnp.int32)
+
+    is_seq = (model.kind == pat.KIND_SEQ)[:, None]
+    new_state = jnp.where(pms.active,
+                          jnp.where(is_seq, seq_next, any_next), pms.state)
+
+    # idset insert at the next free position for ANY matches: a PM at state j
+    # holds (j-1) ids if the spawn event didn't count (Q3) or j ids if it did
+    # (Q4) — so the insertion slot is state-1 (+1 when spawn_counts).
+    A = cfg.max_any_ids
+    sc = model.spawn_counts.astype(jnp.int32)[:, None]
+    slot = jnp.clip(pms.state - 1 + sc, 0, A - 1)
+    do_insert = (~is_seq) & pms.active & any_match
+    onehot = jax.nn.one_hot(slot, A, dtype=bool) & do_insert[..., None]
+    idset = jnp.where(onehot, ev_id, pms.idset)
+
+    completed = pms.active & (new_state == final) & (pms.state != final)
+    active = pms.active & ~completed
+    pms2 = PMStore(active=active, state=new_state, open_idx=pms.open_idx,
+                   bind=pms.bind, idset=idset)
+    return pms2, pms.state, new_state, completed
+
+
+def _spawn(cfg: EngineConfig, model: EngineModel, pms: PMStore, ring: Array,
+           i: Array, ev_open: Array, ev_class: Array, ev_bind: Array,
+           ev_id: Array):
+    """Spawn new PMs.  Returns (pms, spawned_per_pattern, overflow_count).
+
+    SPAWN_AT_OPEN: the window-open event itself spawns one PM at state 1.
+    SPAWN_IN_WINDOWS: a class-1 event spawns a PM (state 1, bound to its
+    binding value) in every ring window that lacks one.
+    """
+    P, N, K = cfg.num_patterns, cfg.max_pms, cfg.ring_size
+    at_open = model.spawn_mode == pat.SPAWN_AT_OPEN
+
+    # Candidate spawns: K slots per pattern. Candidate 0 doubles as the
+    # AT_OPEN candidate.
+    ring_valid = ring >= 0
+    in_window = (i - ring) < model.window_size[:, None]
+    exists = ((pms.active[:, None, :]) &
+              (pms.open_idx[:, None, :] == ring[:, :, None]) &
+              (pms.bind[:, None, :] == ev_bind[:, None, None])).any(-1)
+    win_spawn = (ring_valid & in_window & ~exists &
+                 (ev_class == 1)[:, None] & (~at_open)[:, None])
+    open_spawn = (at_open & ev_open)[:, None] & (jnp.arange(K) == 0)
+    cand = win_spawn | open_spawn                            # (P, K)
+    cand_open_idx = jnp.where(at_open[:, None], i, ring)     # (P, K)
+
+    # Allocate free slots: order inactive-first (stable), take first K.
+    free_order = jnp.argsort(pms.active, axis=1, stable=True)  # (P, N)
+    n_free = (~pms.active).sum(axis=1)                          # (P,)
+    rank = jnp.cumsum(cand, axis=1) - 1                        # (P, K)
+    can_alloc = cand & (rank < n_free[:, None])
+    overflow = (cand & ~can_alloc).sum()
+    slots = jnp.take_along_axis(free_order, jnp.clip(rank, 0, N - 1), axis=1)
+
+    rows = jnp.arange(P)[:, None] * jnp.ones((1, K), jnp.int32)
+    flatidx = (rows * N + slots).reshape(-1)
+    sel = can_alloc.reshape(-1)
+
+    upd = jnp.where(sel, flatidx, cfg.flat_pms)  # drop-mode OOB when not sel
+    active = pms.active.reshape(-1).at[upd].set(True, mode="drop")
+    state = pms.state.reshape(-1).at[upd].set(1, mode="drop")
+    open_i = pms.open_idx.reshape(-1).at[upd].set(
+        cand_open_idx.reshape(-1), mode="drop")
+    bind = pms.bind.reshape(-1).at[upd].set(
+        jnp.broadcast_to(ev_bind[:, None], (P, K)).reshape(-1), mode="drop")
+    # Fresh idset row: the spawning event's id occupies slot 0 for patterns
+    # where the spawn consumes the first distinct match (Q4).
+    A = cfg.max_any_ids
+    row0 = jnp.where(model.spawn_counts[:, None],
+                     jnp.full((P, 1), ev_id, jnp.int32), -1)       # (P, 1)
+    fresh = jnp.concatenate(
+        [row0, jnp.full((P, A - 1), -1, jnp.int32)], axis=1)  # (P, A)
+    fresh_pk = jnp.broadcast_to(fresh[:, None, :], (P, K, A)).reshape(-1, A)
+    idset = pms.idset.reshape(cfg.flat_pms, A).at[upd].set(
+        fresh_pk, mode="drop")
+
+    spawned = can_alloc.sum(axis=1).astype(jnp.float32)
+    pms2 = PMStore(active=active.reshape(P, N), state=state.reshape(P, N),
+                   open_idx=open_i.reshape(P, N), bind=bind.reshape(P, N),
+                   idset=idset.reshape(P, N, cfg.max_any_ids))
+    return pms2, spawned, overflow.astype(jnp.float32)
+
+
+def _shed_now(cfg: EngineConfig, model: EngineModel, c: Carry, i: Array,
+              rho: Array) -> tuple[Carry, Array]:
+    """Run the load shedder (Alg. 2 / PM-BL) and pay its simulated cost."""
+    P, N = cfg.num_patterns, cfg.max_pms
+    pms = c.pms
+    n_before = pms.active.sum()
+    r_w = model.window_size[:, None] - (i - pms.open_idx)
+    flat_active = pms.active.reshape(-1)
+    key, sub = jax.random.split(c.key)
+    if cfg.shedder == SHED_PSPICE:
+        pattern_id = jnp.repeat(jnp.arange(P, dtype=jnp.int32), N)
+        new_flat = shd.shed(
+            "pspice", key=sub, active=flat_active, rho=rho,
+            stacked_tables=model.ut_tables, bin_sizes=model.ut_bins,
+            pattern_id=pattern_id, state=pms.state.reshape(-1),
+            r_w=r_w.reshape(-1))
+    else:  # PM-BL
+        new_flat = shd.shed("pmbl", key=sub, active=flat_active, rho=rho)
+    active = new_flat.reshape(P, N)
+    dropped = (n_before - active.sum()).astype(jnp.float32)
+    shed_cost = cfg.c_shed_base + cfg.c_shed_pm * n_before.astype(jnp.float32)
+    c = c._replace(
+        pms=pms._replace(active=active), key=key,
+        sim_time=c.sim_time + shed_cost,
+        pms_shed=c.pms_shed + dropped,
+        shed_calls=c.shed_calls + 1.0)
+    return c, dropped
+
+
+def _step(cfg: EngineConfig, model: EngineModel, carry: Carry,
+          ev: tuple) -> tuple[Carry, StepOut]:
+    (i, ev_class, ev_bind, ev_open, ev_id, ev_rand, ebl_raw, arrival) = ev
+    c = carry
+    pms = c.pms
+
+    # -- 1. expire closed windows ------------------------------------------
+    expired = pms.active & ((i - pms.open_idx) >= model.window_size[:, None])
+    pms = pms._replace(active=pms.active & ~expired)
+
+    # -- ring update (window-open bookkeeping for SPAWN_IN_WINDOWS) ---------
+    in_win_mode = model.spawn_mode == pat.SPAWN_IN_WINDOWS
+    opens = ev_open & in_win_mode
+    ring = jnp.where(
+        opens[:, None] &
+        (jnp.arange(cfg.ring_size) == c.ring_ptr[:, None]), i, c.ring)
+    ring_ptr = jnp.where(opens, (c.ring_ptr + 1) % cfg.ring_size, c.ring_ptr)
+
+    # -- 2. queueing latency & overload check (Alg. 1) ----------------------
+    sim_time = jnp.maximum(c.sim_time, arrival)
+    l_q = sim_time - arrival
+    n_pm = pms.active.sum().astype(jnp.float32)
+    c = c._replace(pms=pms, ring=ring, ring_ptr=ring_ptr, sim_time=sim_time)
+
+    did_shed = jnp.bool_(False)
+    if cfg.shedder in (SHED_PSPICE, SHED_PMBL):
+        dec = ovl.detect_overload(model.f_model, model.g_model, l_q,
+                                  n_pm.astype(jnp.int32), cfg.latency_bound,
+                                  cfg.safety_buffer)
+        c = jax.lax.cond(
+            dec.shed & (dec.rho > 0),
+            lambda cc: _shed_now(cfg, model, cc, i, dec.rho)[0],
+            lambda cc: cc, c)
+        did_shed = dec.shed & (dec.rho > 0)
+
+    # -- 3. E-BL input drop --------------------------------------------------
+    ev_dropped = jnp.bool_(False)
+    gap = jnp.maximum(arrival - c.prev_arrival, 1e-9)
+    ema_gap = 0.99 * c.ema_gap + 0.01 * gap
+    c = c._replace(ema_gap=ema_gap, prev_arrival=arrival)
+    if cfg.shedder == SHED_EBL:
+        dec = ovl.detect_overload(model.f_model, model.g_model, l_q,
+                                  n_pm.astype(jnp.int32), cfg.latency_bound,
+                                  cfg.safety_buffer)
+        # Feedforward: drop fraction d s.t. d·c_ebl + (1-d)·l_p == 1/rate,
+        # plus backlog-proportional pressure to drain existing queueing.
+        l_p_est = ovl.predict_latency(model.f_model, n_pm)
+        d_ff = (l_p_est - ema_gap) / jnp.maximum(l_p_est - cfg.c_ebl, 1e-9)
+        d_bk = cfg.ebl_backlog_gain * l_q / cfg.latency_bound
+        d_need = jnp.clip(d_ff + d_bk, 0.0, 1.0)
+        ebl_frac = jnp.where(dec.shed,
+                             jnp.maximum(c.ebl_frac * cfg.ebl_decay, d_need),
+                             c.ebl_frac * cfg.ebl_decay)
+        raw_eff = cfg.ebl_floor + (1.0 - cfg.ebl_floor) * ebl_raw
+        mean_eff = cfg.ebl_floor + (1.0 - cfg.ebl_floor) * model.ebl_raw_mean
+        p_drop = jnp.clip(raw_eff * ebl_frac /
+                          jnp.maximum(mean_eff, 1e-9), 0.0, 1.0)
+        ev_dropped = ev_rand < p_drop
+        c = c._replace(ebl_frac=ebl_frac,
+                       ebl_dropped=c.ebl_dropped + ev_dropped)
+        did_shed = dec.shed
+
+    pms = c.pms
+    live_class = jnp.where(ev_dropped, jnp.zeros_like(ev_class), ev_class)
+    live_open = jnp.where(ev_dropped, jnp.zeros_like(ev_open), ev_open)
+
+    # -- 4. advance + completions -------------------------------------------
+    pms2, s_old, s_new, completed = _advance(cfg, model, pms, live_class,
+                                             ev_bind, ev_id)
+    n_completed = completed.sum(axis=1).astype(jnp.float32)
+
+    # -- 5. spawn -------------------------------------------------------------
+    pms3, spawned, oflow = _spawn(cfg, model, pms2, c.ring, i, live_open,
+                                  live_class, ev_bind, ev_id)
+
+    # -- 6. observations (model-building phase only) -------------------------
+    obs_counts, obs_rewards = c.obs_counts, c.obs_rewards
+    if cfg.gather_stats:
+        P, N, M = cfg.num_patterns, cfg.max_pms, cfg.max_states
+        w = pms.active.astype(jnp.float32)                    # observed PMs
+        t = (cfg.c_match * model.proc_cost)[:, None] * w      # per-PM time
+        pidx = jnp.arange(P, dtype=jnp.int32)[:, None] * jnp.ones(
+            (1, N), jnp.int32)
+        flat = (pidx * M + s_old) * M + s_new
+        obs_counts = obs_counts.reshape(-1).at[flat.reshape(-1)].add(
+            w.reshape(-1)).reshape(P, M, M)
+        obs_rewards = obs_rewards.reshape(-1).at[flat.reshape(-1)].add(
+            t.reshape(-1)).reshape(P, M, M)
+
+    # -- 7. simulated processing time & latency ------------------------------
+    n_active_p = pms.active.sum(axis=1).astype(jnp.float32)  # matched-against
+    t_proc = cfg.c_base + (cfg.c_match * model.proc_cost * n_active_p).sum()
+    t_proc = jnp.where(ev_dropped, cfg.c_ebl, t_proc)
+    sim_time = c.sim_time + t_proc
+    l_e = sim_time - arrival
+
+    # latency samples for fitting f (n_pm -> l_p): store (n, t_proc).
+    S = c.lat_samples_n.shape[0]
+    ptr = c.lat_ptr % S
+    lat_n = c.lat_samples_n.at[ptr].set(n_pm)
+    lat_l = c.lat_samples_l.at[ptr].set(t_proc)
+
+    c = Carry(
+        pms=pms3, ring=c.ring, ring_ptr=c.ring_ptr, sim_time=sim_time,
+        key=c.key, ebl_frac=c.ebl_frac, ema_gap=c.ema_gap,
+        prev_arrival=c.prev_arrival,
+        complex_count=c.complex_count + n_completed,
+        pms_created=c.pms_created + spawned,
+        pms_shed=c.pms_shed, shed_calls=c.shed_calls,
+        overflow=c.overflow + oflow, ebl_dropped=c.ebl_dropped,
+        obs_counts=obs_counts, obs_rewards=obs_rewards,
+        lat_samples_n=lat_n, lat_samples_l=lat_l, lat_ptr=c.lat_ptr + 1,
+    )
+    out = StepOut(l_e=l_e, n_pm=pms3.active.sum().astype(jnp.float32),
+                  shed=did_shed, dropped=ev_dropped)
+    return c, out
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def run_engine(cfg: EngineConfig, model: EngineModel, events: EventBatch,
+               carry: Carry) -> tuple[Carry, StepOut]:
+    """Run the operator over a whole event stream (one lax.scan)."""
+    n = events.ev_class.shape[0]
+    xs = (jnp.arange(n, dtype=jnp.int32), events.ev_class, events.ev_bind,
+          events.ev_open, events.ev_id, events.ev_rand, events.ebl_raw,
+          events.arrival)
+    step = functools.partial(_step, cfg, model)
+    return jax.lax.scan(step, carry, xs)
+
+
+# ---------------------------------------------------------------------------
+# Results summary
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    complex_count: np.ndarray   # (P,)
+    pms_created: np.ndarray     # (P,)
+    pms_shed: float
+    shed_calls: float
+    overflow: float
+    ebl_dropped: float
+    l_e: np.ndarray             # (n,)
+    n_pm: np.ndarray            # (n,)
+    carry: Carry
+
+    @property
+    def match_probability(self) -> np.ndarray:
+        return self.complex_count / np.maximum(self.pms_created, 1.0)
+
+    def false_negatives(self, ground_truth: "RunResult",
+                        weights: np.ndarray | None = None) -> float:
+        """Weighted FN fraction vs a no-shed run on the same stream (§II-B)."""
+        gt = np.maximum(ground_truth.complex_count, 1e-9)
+        fn = np.maximum(gt - self.complex_count, 0.0)
+        w = np.ones_like(gt) if weights is None else np.asarray(weights)
+        return float((w * fn).sum() / (w * gt).sum())
+
+
+def summarize(carry: Carry, outs: StepOut) -> RunResult:
+    return RunResult(
+        complex_count=np.asarray(carry.complex_count),
+        pms_created=np.asarray(carry.pms_created),
+        pms_shed=float(carry.pms_shed),
+        shed_calls=float(carry.shed_calls),
+        overflow=float(carry.overflow),
+        ebl_dropped=float(carry.ebl_dropped),
+        l_e=np.asarray(outs.l_e),
+        n_pm=np.asarray(outs.n_pm),
+        carry=carry,
+    )

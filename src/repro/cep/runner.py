@@ -1,0 +1,180 @@
+"""Experiment runner: the full pSPICE lifecycle (paper §IV experimental
+methodology).
+
+  1. WARM-UP at a sustainable rate with statistic gathering on — the model
+     builder's observation phase (§III-C).
+  2. MODEL BUILD: transition matrices, reward matrices, MRP value iteration,
+     utility tables; latency regressions f (from gathered samples) and g.
+  3. MAX-THROUGHPUT measurement from the calibrated cost model at the warm
+     steady-state PM population ("maximum operator throughput" in §IV-A).
+  4. OVERLOAD RUN at rate = multiplier × max throughput with the chosen
+     shedder, vs. a no-shed GROUND-TRUTH run on the identical stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.core import markov, overload as ovl, utility as util
+from repro.data import streams
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class BuiltModel:
+    """Everything the model builder produces."""
+    T: list          # per-pattern transition matrices
+    R: list          # per-pattern reward matrices
+    tables: list     # per-pattern UtilityTable
+    ut_stacked: Array
+    ut_bins: Array
+    f_model: ovl.LatencyModel
+    g_model: ovl.LatencyModel
+    max_rate: float  # measured max operator throughput (events/s)
+    steady_n_pm: float
+
+
+def default_config(cp: pat.CompiledPatterns, **kw) -> eng.EngineConfig:
+    base = dict(
+        num_patterns=cp.num_patterns,
+        max_states=cp.max_states,
+        max_classes=cp.trans.shape[2] - 1,
+        max_pms=2048,
+        max_any_ids=max(8, int(cp.final_state.max()) + 1),
+        ring_size=8,
+    )
+    base.update(kw)
+    return eng.EngineConfig(**base)
+
+
+def build_model(specs: Sequence[pat.PatternSpec], cfg: eng.EngineConfig,
+                warm_events: streams.EventBatch, bin_size: int = 64,
+                use_remaining_time: bool = True,
+                seed: int = 0) -> BuiltModel:
+    """Phase 1+2: warm-up run with stats on, then build everything."""
+    cp = pat.compile_patterns(specs)
+    warm_cfg = dataclasses.replace(cfg, gather_stats=True,
+                                   shedder=eng.SHED_NONE)
+    model0 = eng.make_model(cp, warm_cfg)
+    carry = eng.init_carry(warm_cfg, seed=seed)
+    carry, outs = eng.run_engine(warm_cfg, model0, warm_events, carry)
+
+    Ts, Rs, tables = [], [], []
+    for p, spec in enumerate(specs):
+        m = spec.num_states
+        stats = markov.TransitionStats(
+            counts=carry.obs_counts[p, :m, :m],
+            reward_sum=carry.obs_rewards[p, :m, :m])
+        T = markov.estimate_transition_matrix(stats)
+        R = markov.estimate_reward_matrix(
+            stats, default_reward=cfg.c_match * float(spec.proc_cost))
+        Ts.append(T)
+        Rs.append(R)
+        tables.append(util.build_utility_table(
+            T, R, window_size=spec.window_size, bin_size=bin_size,
+            weight=spec.weight, use_remaining_time=use_remaining_time))
+    ut_stacked, ut_bins = util.stack_tables(tables,
+                                            max_states=cp.max_states)
+
+    # Latency regression f from the gathered (n_pm, t_proc) samples.
+    S = carry.lat_samples_n.shape[0]
+    n_valid = jnp.minimum(carry.lat_ptr, S)
+    valid = jnp.arange(S) < n_valid
+    f_model = ovl.fit_latency_model(carry.lat_samples_n,
+                                    carry.lat_samples_l, valid)
+    # g (shed latency) from the simulator's true sort-cost model — in a real
+    # deployment these samples come from observed shed calls; the warm run
+    # never sheds, so we use the calibrated constants directly.
+    g_model = ovl.LatencyModel(a=jnp.float32(cfg.c_shed_pm),
+                               b=jnp.float32(cfg.c_shed_base),
+                               kind=jnp.int32(ovl.LINEAR))
+
+    # Max throughput at the warm steady state: 1 / E[t_proc].
+    n_tail = max(1, warm_events.ev_class.shape[0] // 2)
+    steady_n_pm = float(np.asarray(outs.n_pm)[-n_tail:].mean())
+    t_proc = float(ovl.predict_latency(f_model, jnp.float32(steady_n_pm)))
+    max_rate = 1.0 / max(t_proc, 1e-9)
+    return BuiltModel(T=Ts, R=Rs, tables=tables, ut_stacked=ut_stacked,
+                      ut_bins=ut_bins, f_model=f_model, g_model=g_model,
+                      max_rate=max_rate, steady_n_pm=steady_n_pm)
+
+
+def run_with_shedder(specs: Sequence[pat.PatternSpec],
+                     cfg: eng.EngineConfig, built: BuiltModel,
+                     raw: streams.RawStream, rate: float, shedder: str,
+                     seed: int = 0) -> eng.RunResult:
+    cp = pat.compile_patterns(specs)
+    run_cfg = dataclasses.replace(cfg, gather_stats=False, shedder=shedder)
+    events = streams.classify(specs, raw, rate=rate, seed=seed)
+    model = eng.make_model(cp, run_cfg, ut_tables=built.ut_stacked,
+                           ut_bins=built.ut_bins, f_model=built.f_model,
+                           g_model=built.g_model,
+                           ebl_raw_mean=float(
+                               np.asarray(events.ebl_raw).mean()))
+    carry = eng.init_carry(run_cfg, seed=seed)
+    carry, outs = eng.run_engine(run_cfg, model, events, carry)
+    return eng.summarize(carry, outs)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    shedder: str
+    fn: float                 # weighted false-negative fraction
+    match_probability: float  # ground-truth match probability
+    max_rate: float
+    result: eng.RunResult
+    ground_truth: eng.RunResult
+
+    @property
+    def lb_violations(self) -> float:
+        return float((self.result.l_e > 0).mean())
+
+
+def run_experiment(specs: Sequence[pat.PatternSpec], raw: streams.RawStream,
+                   shedders: Sequence[str] = (eng.SHED_PSPICE, eng.SHED_PMBL,
+                                              eng.SHED_EBL),
+                   rate_multiplier: float = 1.2,
+                   warm_frac: float = 0.3, latency_bound: float = 1.0,
+                   bin_size: int = 64, max_pms: int = 2048,
+                   use_remaining_time: bool = True,
+                   seed: int = 0, **cfg_kw) -> dict[str, ExperimentResult]:
+    """The full paper methodology on one stream; returns per-shedder results."""
+    cp = pat.compile_patterns(specs)
+    cfg = default_config(cp, latency_bound=latency_bound, max_pms=max_pms,
+                         **cfg_kw)
+
+    n_warm = int(raw.n * warm_frac)
+    raw_warm = dataclasses.replace(
+        raw, n=n_warm, type_id=raw.type_id[:n_warm], attr=raw.attr[:n_warm],
+        group=raw.group[:n_warm])
+    raw_run = dataclasses.replace(
+        raw, n=raw.n - n_warm, type_id=raw.type_id[n_warm:],
+        attr=raw.attr[n_warm:], group=raw.group[n_warm:])
+
+    # Warm-up below capacity: use a conservative low rate.
+    warm_events = streams.classify(specs, raw_warm, rate=1.0, seed=seed)
+    built = build_model(specs, cfg, warm_events, bin_size=bin_size,
+                        use_remaining_time=use_remaining_time, seed=seed)
+
+    rate = built.max_rate * rate_multiplier
+    gt = run_with_shedder(specs, cfg, built, raw_run, rate=rate,
+                          shedder=eng.SHED_NONE, seed=seed)
+    weights = np.array([s.weight for s in specs])
+    out = {}
+    for sh in shedders:
+        res = run_with_shedder(specs, cfg, built, raw_run, rate=rate,
+                               shedder=sh, seed=seed)
+        out[sh] = ExperimentResult(
+            shedder=sh,
+            fn=res.false_negatives(gt, weights),
+            match_probability=float(
+                gt.complex_count.sum() / max(gt.pms_created.sum(), 1.0)),
+            max_rate=built.max_rate,
+            result=res, ground_truth=gt)
+    return out

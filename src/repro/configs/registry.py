@@ -1,0 +1,70 @@
+"""Architecture registry: ``--arch <id>`` resolution + input_specs().
+
+input_specs() returns ShapeDtypeStruct stand-ins for every model input of a
+given (arch × shape) cell — weak-type-correct, shardable, no device
+allocation — exactly what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable  # noqa: F401
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "qwen1.5-110b": "repro.configs.qwen15_110b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "whisper-small": "repro.configs.whisper_small",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).smoke_config()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct inputs for one (arch × shape) cell.
+
+    train:   {tokens, labels [, patches | frames]}
+    prefill: {tokens [, patches | frames]}
+    decode:  {tokens (B,), cache: init_cache-shaped structs}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.kind in ("train", "prefill"):
+        batch: dict = {}
+        s_text = S
+        if cfg.vlm_patches:
+            s_text = S - cfg.vlm_patches
+            batch["patches"] = _sds((B, cfg.vlm_patches, cfg.d_model), dt)
+        if cfg.enc_dec:
+            batch["frames"] = _sds((B, cfg.enc_frames, cfg.d_model), dt)
+        batch["tokens"] = _sds((B, s_text), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, s_text), jnp.int32)
+        return batch
+    # decode: cache shapes from init_cache without allocating.
+    from repro.models import decode as D
+    cache = jax.eval_shape(lambda: D.init_cache(cfg, B, S))
+    cache = jax.tree.map(lambda x: _sds(x.shape, x.dtype), cache)
+    return {"tokens": _sds((B,), jnp.int32), "cache": cache}

@@ -1,0 +1,3 @@
+"""pSPICE core: Markov model builder, utility tables, overload detection,
+load shedders (paper §III)."""
+from repro.core import markov, overload, shedder, utility  # noqa: F401

@@ -1,0 +1,138 @@
+"""Overload detection & shed-amount computation (paper §III-E, Algorithm 1).
+
+The overload detector estimates, per input event,
+    l_e = l_q + l_p        (queueing + processing latency)
+and triggers shedding when  l_e + l_s (+ b_s) > LB.
+
+l_p = f(n_pm) and l_s = g(n_pm) are regressions learned online from
+(n_pm, latency) samples; the paper "applies several regression models ... and
+uses the one that results in lower error".  We fit a linear model and an
+n·log2(n) model and keep the better one.  f must be invertible to compute
+n'_pm = f^{-1}(l'_p) (Alg. 1 line 7); both candidates have closed-form
+inverses.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+LINEAR, NLOGN = 0, 1
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """l = a·basis(n) + b with basis either n or n·log2(n+1)."""
+    a: Array
+    b: Array
+    kind: Array  # int32 scalar: LINEAR or NLOGN
+
+    def __call__(self, n_pm: Array) -> Array:
+        return predict_latency(self, n_pm)
+
+
+jax.tree_util.register_pytree_node(
+    LatencyModel,
+    lambda m: ((m.a, m.b, m.kind), None),
+    lambda _, ch: LatencyModel(*ch),
+)
+
+
+def _basis(n: Array, kind: Array) -> Array:
+    n = n.astype(jnp.float32)
+    return jnp.where(kind == LINEAR, n, n * jnp.log2(n + 1.0))
+
+
+def _lstsq_1d(x: Array, y: Array, w: Array) -> tuple[Array, Array]:
+    """Weighted least squares for y = a·x + b (closed form, jit-safe)."""
+    sw = jnp.maximum(w.sum(), 1e-30)
+    mx = (w * x).sum() / sw
+    my = (w * y).sum() / sw
+    cov = (w * (x - mx) * (y - my)).sum()
+    var = jnp.maximum((w * (x - mx) ** 2).sum(), 1e-30)
+    a = cov / var
+    b = my - a * mx
+    return a, b
+
+
+@jax.jit
+def fit_latency_model(n_pm: Array, latency: Array,
+                      valid: Array | None = None) -> LatencyModel:
+    """Fit both candidate regressions, keep the lower-SSE one (paper §III-E)."""
+    w = jnp.ones_like(latency) if valid is None else valid.astype(jnp.float32)
+
+    def fit(kind):
+        x = _basis(n_pm, jnp.int32(kind))
+        a, b = _lstsq_1d(x, latency, w)
+        a = jnp.maximum(a, 1e-12)  # latency must increase with n_pm
+        sse = (w * (a * x + b - latency) ** 2).sum()
+        return a, b, sse
+
+    a0, b0, e0 = fit(LINEAR)
+    a1, b1, e1 = fit(NLOGN)
+    pick_lin = e0 <= e1
+    return LatencyModel(
+        a=jnp.where(pick_lin, a0, a1),
+        b=jnp.where(pick_lin, b0, b1),
+        kind=jnp.where(pick_lin, LINEAR, NLOGN).astype(jnp.int32),
+    )
+
+
+def predict_latency(model: LatencyModel, n_pm: Array) -> Array:
+    return model.a * _basis(jnp.asarray(n_pm), model.kind) + model.b
+
+
+def invert_latency(model: LatencyModel, l_target: Array) -> Array:
+    """n'_pm = f^{-1}(l'_p)  (Alg. 1 line 7).
+
+    Linear: n = (l-b)/a.  For n·log2(n+1): Newton iterations (monotone,
+    convex — converges in a handful of steps; fixed 16 for jit).
+    """
+    t = jnp.maximum((l_target - model.b) / model.a, 0.0)
+
+    def newton(n, _):
+        fn = n * jnp.log2(n + 1.0) - t
+        dfn = jnp.log2(n + 1.0) + n / ((n + 1.0) * jnp.log(2.0))
+        n = jnp.clip(n - fn / jnp.maximum(dfn, 1e-9), 0.0, 1e12)
+        return n, None
+
+    n_nlogn, _ = jax.lax.scan(newton, jnp.maximum(t, 1.0), None, length=16)
+    return jnp.where(model.kind == LINEAR, t, n_nlogn)
+
+
+@dataclasses.dataclass
+class OverloadDecision:
+    shed: Array   # bool — does l_e + l_s (+ b_s) exceed LB?
+    rho: Array    # int32 — number of PMs to drop (0 if not shedding)
+    l_e: Array    # estimated event latency (for telemetry / Fig. 7)
+
+
+jax.tree_util.register_pytree_node(
+    OverloadDecision,
+    lambda d: ((d.shed, d.rho, d.l_e), None),
+    lambda _, ch: OverloadDecision(*ch),
+)
+
+
+def detect_overload(f_model: LatencyModel, g_model: LatencyModel,
+                    l_q: Array, n_pm: Array, latency_bound: float,
+                    safety_buffer: float = 0.0) -> OverloadDecision:
+    """Algorithm 1: decide whether to shed and how many PMs to drop.
+
+    l'_p = LB - l_q - l_s;  n'_pm = f^{-1}(l'_p);  rho = n_pm - n'_pm.
+    """
+    n_pm_f = n_pm.astype(jnp.float32)
+    l_p = predict_latency(f_model, n_pm_f)
+    l_s = predict_latency(g_model, n_pm_f)
+    l_e = l_q + l_p
+    shed = l_e + l_s + safety_buffer > latency_bound
+    l_p_new = jnp.maximum(latency_bound - l_q - l_s - safety_buffer, 0.0)
+    # +eps guards float32 round-down at exact solutions (n' must not be
+    # under-counted by one — that would over-shed every call).
+    n_keep = jnp.floor(invert_latency(f_model, l_p_new)
+                       + 1e-4).astype(jnp.int32)
+    rho = jnp.where(shed, jnp.maximum(n_pm - n_keep, 0), 0).astype(jnp.int32)
+    return OverloadDecision(shed=shed, rho=rho, l_e=l_e)

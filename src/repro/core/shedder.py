@@ -1,0 +1,115 @@
+"""Load shedders (paper §III-F Algorithm 2 + §IV-A baselines).
+
+All shedders operate on the dense PM store of the vectorized CEP operator:
+    active     (N,) bool   — live PM mask
+    pattern_id (N,) int32  — which query each PM belongs to
+    state      (N,) int32  — current state machine state
+    r_w        (N,) int32  — events remaining in the PM's window
+Dropping a PM == clearing its mask bit; no payload movement (TPU adaptation
+of Alg. 2's sort-and-remove, see DESIGN.md §3).
+
+Shedders:
+  - pspice_drop:  utility-table lookup (O(1)/PM) + keep-top-(n-ρ) by utility.
+  - random_drop:  PM-BL — Bernoulli-uniform ρ-subset drop.
+  - (E-BL, the event-level baseline, lives in the engine's input path —
+     see repro/cep/engine.py — because it sheds events, not PMs.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import utility as util
+
+Array = jax.Array
+
+
+def pspice_utilities(stacked_tables: Array, bin_sizes: Array,
+                     active: Array, pattern_id: Array, state: Array,
+                     r_w: Array) -> Array:
+    """Utility per PM slot; inactive slots get +inf so they are never chosen
+    as 'lowest utility' (they aren't droppable — already empty)."""
+    u = util.multi_pattern_lookup(stacked_tables, bin_sizes, pattern_id,
+                                  state, r_w)
+    return jnp.where(active, u, jnp.inf)
+
+
+def drop_lowest_utility(active: Array, utilities: Array, rho: Array) -> Array:
+    """Algorithm 2: drop the rho active PMs with the lowest utilities.
+
+    Vectorized equivalent of sort + drop-first-ρ: rank PMs by utility
+    ascending; clear slots whose rank < ρ.  rho is a traced scalar so this is
+    jit/scan-safe (no dynamic shapes).
+    """
+    order = jnp.argsort(utilities)                # ascending; inf (inactive) last
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    drop = ranks < rho
+    return active & ~drop
+
+
+def random_drop(key: Array, active: Array, rho: Array) -> Array:
+    """PM-BL: drop a uniformly random ρ-subset of active PMs (Bernoulli
+    sampler realized as random ranking — exactly ρ dropped, matching the
+    budget the overload detector computed)."""
+    scores = jax.random.uniform(key, active.shape)
+    scores = jnp.where(active, scores, jnp.inf)
+    order = jnp.argsort(scores)
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    return active & ~(ranks < rho)
+
+
+def shed(kind: str, *, key: Array, active: Array, rho: Array,
+         stacked_tables: Array | None = None, bin_sizes: Array | None = None,
+         pattern_id: Array | None = None, state: Array | None = None,
+         r_w: Array | None = None) -> Array:
+    """Dispatch helper used by the engine. kind in {'pspice', 'pmbl'}."""
+    if kind == "pspice":
+        u = pspice_utilities(stacked_tables, bin_sizes, active, pattern_id,
+                             state, r_w)
+        return drop_lowest_utility(active, u, rho)
+    if kind == "pmbl":
+        return random_drop(key, active, rho)
+    raise ValueError(f"unknown shedder kind: {kind}")
+
+
+# ---------------------------------------------------------------------------
+# E-BL event-utility model (paper §IV-A baseline 2, after He et al. [15] +
+# weighted sampling [13]).  Event *types* get utility proportional to their
+# repetition in patterns and in windows; low-utility types are dropped from
+# incoming windows by uniform sampling within type.
+# ---------------------------------------------------------------------------
+
+def ebl_type_utilities(pattern_class_of_type: Array,
+                       class_repetition_in_patterns: Array,
+                       type_frequency_in_windows: Array) -> Array:
+    """Utility per event type.
+
+    pattern_class_of_type: (n_types,) int32 — pattern class each raw event
+        type maps to (0 == irrelevant to every pattern).
+    class_repetition_in_patterns: (n_classes,) float — how often the class
+        appears across pattern definitions (importance ∝ repetition).
+    type_frequency_in_windows: (n_types,) float — empirical frequency (types
+        that are rare in windows are harder to replace → more valuable).
+    """
+    rep = class_repetition_in_patterns[pattern_class_of_type]
+    freq = jnp.maximum(type_frequency_in_windows, 1e-9)
+    u = rep / freq
+    return jnp.where(pattern_class_of_type > 0, u, 0.0)
+
+
+def ebl_drop_mask(key: Array, type_of_event: Array, type_utils: Array,
+                  drop_fraction: Array) -> Array:
+    """Per-event drop decision: drop probability inversely related to the
+    event type's utility, scaled so the expected drop rate == drop_fraction.
+
+    Returns bool (n_events,) — True means the event is dropped before window
+    processing (black-box shedding)."""
+    u = type_utils[type_of_event]
+    u_max = jnp.maximum(u.max(), 1e-9)
+    # Normalized "keep priority" in [0, 1]; uniform sampling within a type.
+    keep_priority = u / u_max
+    # Drop probability per event, renormalized to hit the global budget.
+    raw = 1.0 - keep_priority
+    mean_raw = jnp.maximum(raw.mean(), 1e-9)
+    p_drop = jnp.clip(raw * (drop_fraction / mean_raw), 0.0, 1.0)
+    return jax.random.uniform(key, type_of_event.shape) < p_drop

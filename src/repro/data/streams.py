@@ -1,0 +1,204 @@
+"""Synthetic event-stream generators shaped like the paper's three datasets
+(§IV-A): NYSE intraday stock quotes, RTLS soccer positions (DEBS'13), and
+Dublin public bus traffic (PLBT).
+
+The container is offline, so we generate streams with the *statistical
+structure* the queries care about (event-type mix, window-open rates,
+matchable-event probabilities, distinct-id cardinalities) and control the
+match probability the way the paper does — via window size (Q1/Q2) or pattern
+size (Q3/Q4).
+
+Each generator returns a RawStream; ``classify`` turns a RawStream + pattern
+list into the engine's EventBatch (per-pattern class / bind / open arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cep import patterns as pat
+from repro.cep.engine import EventBatch
+
+
+@dataclasses.dataclass
+class RawStream:
+    """Dataset-agnostic event records (column-oriented)."""
+    kind: str                 # 'stock' | 'soccer' | 'bus'
+    n: int
+    type_id: np.ndarray       # (n,) int32 — symbol / player / bus id
+    attr: np.ndarray          # (n,) int32 — rise(1)/fall(0) | defend striker
+                              #   id | delayed(1)/on-time(0)
+    group: np.ndarray         # (n,) int32 — n/a | striker id | stop id
+    num_types: int
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+def gen_stock(n: int, num_symbols: int = 500, pattern_symbols: int = 10,
+              hot_fraction: float = 0.9, p_class: float = 0.03,
+              seed: int = 0) -> RawStream:
+    """NYSE-like quote stream: `num_symbols` symbols; per-tick attr=1 when
+    the quote rises strongly enough to count as a pattern event (RE_x).
+
+    The 10 pattern symbols (ids 0..9) dominate tick volume (hot_fraction) —
+    large caps dominate trading, and it creates the regime the paper's E-BL
+    baseline faces: the droppable irrelevant pool is small, so event-level
+    shedding must drop events of pattern symbols (whose matchable/
+    non-matchable ticks it cannot tell apart at type granularity).
+    p_class controls the per-tick probability that a pattern-symbol quote is
+    a matchable rise — i.e. the completion-time scale, hence (via the window
+    size) the match probability, the paper's Fig. 5 x-axis.
+    """
+    rng = np.random.default_rng(seed)
+    hot = rng.integers(0, pattern_symbols, size=n)
+    cold = rng.integers(pattern_symbols, num_symbols, size=n)
+    is_hot = rng.random(n) < hot_fraction
+    type_id = np.where(is_hot, hot, cold).astype(np.int32)
+    rise = ((rng.random(n) < p_class) & is_hot).astype(np.int32)
+    return RawStream(kind="stock", n=n, type_id=type_id, attr=rise,
+                     group=np.zeros(n, np.int32), num_types=num_symbols)
+
+
+def gen_soccer(n: int, num_players: int = 32, num_strikers: int = 2,
+               p_striker: float = 0.004, p_defend: float = 0.05,
+               seed: int = 0) -> RawStream:
+    """RTLS-like stream: ball-possession events by strikers open windows;
+    defend events (defender within distance of the striker) are class-1.
+
+    attr = striker id a defend event refers to (the last striker in
+    possession); group mirrors attr for binding.
+    """
+    rng = np.random.default_rng(seed)
+    r = rng.random(n)
+    is_striker = r < p_striker
+    is_defend = (~is_striker) & (r < p_striker + p_defend)
+    striker_ids = rng.integers(0, num_strikers, size=n).astype(np.int32)
+    # Last striker in possession (binding for defend events).
+    cur = np.maximum.accumulate(
+        np.where(is_striker, np.arange(n), -1))
+    last_striker = np.where(cur >= 0, striker_ids[np.maximum(cur, 0)], -1)
+    defender = rng.integers(num_strikers, num_players, size=n).astype(np.int32)
+    type_id = np.where(is_striker, striker_ids,
+                       np.where(is_defend, defender, -1)).astype(np.int32)
+    attr = np.where(is_striker, 2, np.where(is_defend, 1, 0)).astype(np.int32)
+    group = np.where(is_striker, striker_ids, last_striker).astype(np.int32)
+    return RawStream(kind="soccer", n=n, type_id=type_id, attr=attr,
+                     group=group, num_types=num_players)
+
+
+def gen_bus(n: int, num_buses: int = 911, num_stops: int = 48,
+            p_delay: float = 0.08, burst_stops: int = 6,
+            burst_boost: float = 4.0, seed: int = 0) -> RawStream:
+    """PLBT-like stream: bus events at stops; delays cluster on a few
+    'incident' stops (the correlated-delay structure Q4 detects)."""
+    rng = np.random.default_rng(seed)
+    bus = rng.integers(0, num_buses, size=n).astype(np.int32)
+    stop = rng.integers(0, num_stops, size=n).astype(np.int32)
+    p = np.full(n, p_delay)
+    hot = rng.choice(num_stops, size=burst_stops, replace=False)
+    p[np.isin(stop, hot)] = np.minimum(p_delay * burst_boost, 0.9)
+    delayed = (rng.random(n) < p).astype(np.int32)
+    return RawStream(kind="bus", n=n, type_id=bus, attr=delayed, group=stop,
+                     num_types=num_buses)
+
+
+# ---------------------------------------------------------------------------
+# Classification: RawStream × patterns → EventBatch
+# ---------------------------------------------------------------------------
+
+def _classify_one(spec: pat.PatternSpec, raw: RawStream):
+    """Per-pattern (class, bind, open, potential_class) arrays for one stream.
+
+    ``potential_class`` is the class the event's TYPE could produce (e.g.
+    any tick of pattern symbol j, rising or not, has potential class j+1).
+    E-BL only sees type granularity — it cannot tell matchable from
+    non-matchable events of the same type (paper §IV-A: "an event type
+    (e.g., player Id or stock symbol)").
+    """
+    n = raw.n
+    if raw.kind == "stock":
+        # Class j (1..C) == strongly-rising quote of pattern symbol j-1.
+        is_pat = raw.type_id < spec.num_classes
+        pot = np.where(is_pat, raw.type_id + 1, 0)
+        cls = np.where(is_pat & (raw.attr == 1), raw.type_id + 1, 0)
+        opener = spec.class_sequence[0] if spec.class_sequence else 1
+        opens = cls == opener
+        bind = np.full(n, -1, np.int32)
+    elif raw.kind == "soccer":
+        cls = np.where(raw.attr == 1, 1, 0)          # defend events
+        opens = raw.attr == 2                        # striker possession
+        bind = raw.group                             # striker id
+        # Any player event could be a defend (or striker) event.
+        pot = np.where(raw.attr == 2, 2, np.where(raw.type_id >= 0, 1, 0))
+    elif raw.kind == "bus":
+        cls = np.where(raw.attr == 1, 1, 0)          # delayed bus
+        # Slide-opened windows: every `slide` events.
+        opens = (np.arange(n) % max(spec.slide, 1)) == 0
+        bind = raw.group                             # stop id
+        pot = np.ones(n, np.int32)                   # every bus could delay
+    else:
+        raise ValueError(raw.kind)
+    return (cls.astype(np.int32), bind.astype(np.int32), opens.astype(bool),
+            pot.astype(np.int32))
+
+
+def ebl_event_priorities(specs: Sequence[pat.PatternSpec], raw: RawStream,
+                         pot_per_pattern: np.ndarray) -> np.ndarray:
+    """E-BL raw drop priority per event (paper §IV-A baseline 2).
+
+    Event-TYPE utility ∝ repetition of the type's potential class across
+    pattern definitions ÷ the type's frequency in windows; priority =
+    1 − normalized utility (0 = never drop, 1 = drop first).  Types
+    irrelevant to every pattern get priority 1 and are shed first; when the
+    irrelevant pool can't cover the drop budget, the feedback controller in
+    the engine pushes the drop fraction up until pattern-type events are
+    dropped too — at type granularity, uniform sampling within a type then
+    hits matchable events (the source of E-BL's false negatives).
+    """
+    n = raw.n
+    util = np.zeros(n)
+    for p, spec in enumerate(specs):
+        pot = pot_per_pattern[:, p]
+        if spec.kind == pat.KIND_SEQ:
+            seq = np.array(spec.class_sequence)
+            rep = np.bincount(seq, minlength=spec.num_classes + 1).astype(
+                float)
+        else:
+            rep = np.zeros(3)
+            rep[1] = spec.any_n
+            rep[2] = 1.0  # the opener (e.g. striker) appears once
+        freq = np.bincount(pot, minlength=len(rep)).astype(float) / n
+        u = np.where(pot > 0, rep[pot] / np.maximum(freq[pot], 1e-9), 0.0)
+        util += spec.weight * u
+    umax = max(util.max(), 1e-9)
+    return (1.0 - util / umax).astype(np.float32)
+
+
+def classify(specs: Sequence[pat.PatternSpec], raw: RawStream, rate: float,
+             seed: int = 0) -> EventBatch:
+    """Build the engine's EventBatch: per-pattern class/bind/open + arrival
+    times for the given input event rate (events/second)."""
+    P = len(specs)
+    cls = np.zeros((raw.n, P), np.int32)
+    bind = np.zeros((raw.n, P), np.int32)
+    opens = np.zeros((raw.n, P), bool)
+    pot = np.zeros((raw.n, P), np.int32)
+    for p, spec in enumerate(specs):
+        cls[:, p], bind[:, p], opens[:, p], pot[:, p] = _classify_one(
+            spec, raw)
+    ebl_raw = ebl_event_priorities(specs, raw, pot)
+    rng = np.random.default_rng(seed + 1234)
+    return EventBatch(
+        ev_class=jnp.asarray(cls),
+        ev_bind=jnp.asarray(bind),
+        ev_open=jnp.asarray(opens),
+        ev_id=jnp.asarray(raw.type_id),
+        ev_rand=jnp.asarray(rng.random(raw.n), dtype=jnp.float32),
+        ebl_raw=jnp.asarray(ebl_raw),
+        arrival=jnp.asarray(np.arange(raw.n) / rate, dtype=jnp.float32),
+    )

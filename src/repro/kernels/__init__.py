@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the system's compute hot spots.
+
+  flash_attention.py — VMEM-resident online-softmax attention (the
+      memory-term bottleneck of every ≥32k attention cell; §Perf).
+  nfa_transition.py  — the CEP operator's hot loop (paper §III): per-event
+      PM advance as a one-hot MXU matmul instead of a gather.
+  shed_select.py     — Algorithm 2 without the sort: fused O(1) utility
+      lookup + histogram-threshold selection.
+  ops.py             — jit'd public wrappers.
+  ref.py             — pure-jnp oracles (the tests' allclose targets).
+
+All kernels are TPU-targeted (pl.pallas_call + BlockSpec VMEM tiling) and
+validated in this container with interpret=True against the oracles across
+shape/dtype sweeps (tests/test_kernels.py).
+"""

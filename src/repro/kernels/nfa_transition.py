@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for the CEP operator's hot loop: advancing every
+active partial match against one incoming event (paper §III / engine step 4).
+
+TPU adaptation: the per-PM table lookup ``next = trans[state, class]`` is a
+data-dependent gather — hostile to the VPU.  We rewrite it as a ONE-HOT
+MATMUL: ``next = onehot(state, M) @ trans_col`` where ``trans_col[s] =
+trans[s, class]`` is the (tiny, ≤32-entry) column for the incoming event's
+class, resident in VMEM.  The one-hot matrix hits the MXU; the whole PM tile
+advances in one pass, fused with the binding check and completion detection.
+
+Grid: PM tiles of ``tile`` slots; trans_col/bind/final ride along in VMEM.
+
+TARGET: TPU.  VALIDATED: interpret=True vs ref.nfa_advance_ref (tests/).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nfa_kernel(state_ref, bind_ref, active_ref, tcol_ref, scal_ref,
+                newstate_ref, completed_ref, *, m: int):
+    state = state_ref[...]                    # (tile,) int32
+    bind = bind_ref[...]
+    active = active_ref[...]                  # (tile,) int32 (0/1)
+    tcol = tcol_ref[...].astype(jnp.float32)  # (M,) next-state per state
+    ev_bind = scal_ref[0]
+    final = scal_ref[1]
+    use_binding = scal_ref[2]
+
+    onehot = (state[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (state.shape[0], m), 1)
+              ).astype(jnp.float32)           # (tile, M)
+    nxt = jnp.round(onehot @ tcol).astype(jnp.int32)
+    bind_ok = jnp.where(use_binding > 0, bind == ev_bind, True)
+    live = active > 0
+    nxt = jnp.where(live & bind_ok, nxt, state)
+    completed = live & (nxt == final) & (state != final)
+    newstate_ref[...] = nxt
+    completed_ref[...] = completed.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "interpret"))
+def nfa_advance_pallas(state: jax.Array, bind: jax.Array, active: jax.Array,
+                       trans_col: jax.Array, ev_bind, final, use_binding,
+                       *, tile: int = 256, interpret: bool = True):
+    """Advance all PMs against one event.
+
+    state/bind: (N,) int32; active: (N,) bool; trans_col: (M,) int32 —
+    trans[:, class] for the event's class.  Returns (new_state (N,),
+    completed (N,) bool)."""
+    N = state.shape[0]
+    m = trans_col.shape[0]
+    tile = min(tile, N)
+    assert N % tile == 0
+    scal = jnp.array([ev_bind, final, use_binding], jnp.int32)
+    new_state, completed = pl.pallas_call(
+        functools.partial(_nfa_kernel, m=m),
+        grid=(N // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                   pl.BlockSpec((tile,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((N,), jnp.int32)],
+        interpret=interpret,
+    )(state, bind, active.astype(jnp.int32), trans_col, scal)
+    return new_state, completed.astype(bool)

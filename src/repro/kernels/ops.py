@@ -1,0 +1,53 @@
+"""Jit'd public wrappers around the Pallas kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
+from repro.kernels.nfa_transition import nfa_advance_pallas  # noqa: F401
+from repro.kernels.shed_select import (utility_histogram_pallas,
+                                       utility_lookup_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("bin_size", "nbins",
+                                             "interpret"))
+def shed_lowest_pallas(active: jax.Array, state: jax.Array, r_w: jax.Array,
+                       table: jax.Array, rho: jax.Array, *, bin_size: int,
+                       nbins: int = 64, interpret: bool = True) -> jax.Array:
+    """Algorithm 2 via kernels: utility lookup → histogram → threshold →
+    drop mask (exact ρ via rank-adjust inside the boundary bucket).
+
+    Returns the new active mask with the ρ lowest-utility PMs cleared.
+    """
+    u = utility_lookup_pallas(state, r_w, active, table, bin_size=bin_size,
+                              interpret=interpret)
+    # Threshold plan over active utilities only.
+    act = active
+    big = jnp.float32(3.4e38)
+    u_act = jnp.where(act, u, big)
+    lo = jnp.min(jnp.where(act, u, big))
+    hi = jnp.max(jnp.where(act, u, -big))
+    hi = jnp.where(hi > lo, hi, lo + 1.0)
+    hist = utility_histogram_pallas(u_act, lo, hi, nbins=nbins,
+                                    interpret=interpret)
+    cum = jnp.cumsum(hist)
+    # First bucket where cumulative count reaches rho.
+    kbucket = jnp.searchsorted(cum, rho, side="left")
+    kbucket = jnp.clip(kbucket, 0, nbins - 1)
+    edge = lo + (hi - lo) * kbucket.astype(jnp.float32) / nbins
+    below = act & (u_act < edge)
+    n_below = below.sum()
+    # Exact-ρ remainder inside the boundary bucket: rank by utility order.
+    # (The last bucket is right-closed — its top edge is the active max.)
+    upper = jnp.where(kbucket == nbins - 1, jnp.inf,
+                      lo + (hi - lo) * (kbucket + 1).astype(jnp.float32)
+                      / nbins)
+    in_bucket = act & ~below & (u_act < upper)
+    need = jnp.maximum(rho - n_below, 0)
+    order = jnp.argsort(jnp.where(in_bucket, u_act, big))
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    bucket_drop = in_bucket & (ranks < need)
+    return act & ~(below | bucket_drop)

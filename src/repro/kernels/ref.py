@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import shedder as _shedder
+from repro.core import utility as _utility
+from repro.models.layers import attention_ref  # noqa: F401  (flash oracle)
+
+
+def nfa_advance_ref(state, bind, active, trans_col, ev_bind, final,
+                    use_binding):
+    """Oracle for nfa_advance_pallas: plain gather semantics."""
+    nxt = trans_col[state]
+    bind_ok = jnp.where(use_binding > 0, bind == ev_bind, True)
+    live = active
+    nxt = jnp.where(live & bind_ok, nxt, state)
+    completed = live & (nxt == final) & (state != final)
+    return nxt, completed
+
+
+def utility_lookup_ref(state, r_w, active, table, bin_size):
+    """Oracle for utility_lookup_pallas (core.utility.lookup_utility with
+    +inf on inactive slots)."""
+    u = _utility.lookup_utility(table, bin_size, state, r_w)
+    return jnp.where(active, u, jnp.float32(3.4e38))
+
+
+def histogram_ref(u, lo, hi, nbins):
+    edges = lo + (hi - lo) * jnp.arange(nbins + 1, dtype=jnp.float32) / nbins
+    edges = edges.at[-1].set(jnp.inf)
+    return ((u[:, None] >= edges[:-1][None]) &
+            (u[:, None] < edges[1:][None])).astype(jnp.int32).sum(axis=0)
+
+
+def shed_lowest_ref(active, state, r_w, table, rho, bin_size):
+    """Oracle for shed_lowest_pallas: the sort-based Algorithm 2."""
+    u = utility_lookup_ref(state, r_w, active, table, bin_size)
+    return _shedder.drop_lowest_utility(active, jnp.where(active, u,
+                                                          jnp.inf), rho)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernels for the load shedder (paper Algorithm 2).
+
+Two kernels replace the sort in Alg. 2 with a histogram-threshold plan
+(O(N) instead of O(N log N), and VMEM-tiled):
+
+  1. ``utility_lookup``: fused UT-table lookup with linear interpolation —
+     again expressed as one-hot matmuls against the (bins × states) utility
+     table resident in VMEM (O(1) per PM, the property the paper highlights).
+  2. ``utility_histogram``: per-tile bucket counts accumulated across the
+     grid — the driver (ops.shed_lowest_pallas) runs a cumsum over the tiny
+     histogram to pick the drop threshold τ such that ~ρ PMs fall below it,
+     then a final compare produces the drop mask (exact-ρ tie-break happens
+     on the ≤1-bucket remainder).
+
+TARGET: TPU.  VALIDATED: interpret=True vs core.shedder oracle (tests/).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lookup_kernel(state_ref, rw_ref, active_ref, table_ref, out_ref, *,
+                   num_bins: int, m: int, bin_size: int, inf_val: float):
+    state = state_ref[...]
+    rw = rw_ref[...].astype(jnp.float32)
+    active = active_ref[...] > 0
+    table = table_ref[...]                    # (num_bins, M)
+
+    pos = jnp.clip(rw / bin_size - 1.0, 0.0, num_bins - 1.0)
+    j0 = jnp.floor(pos).astype(jnp.int32)
+    j1 = jnp.minimum(j0 + 1, num_bins - 1)
+    frac = pos - j0.astype(jnp.float32)
+
+    tile = state.shape[0]
+    oh_state = (state[:, None] ==
+                jax.lax.broadcasted_iota(jnp.int32, (tile, m), 1)
+                ).astype(jnp.float32)         # (tile, M)
+    per_bin = oh_state @ table.T              # (tile, num_bins)
+    oh0 = (j0[:, None] ==
+           jax.lax.broadcasted_iota(jnp.int32, (tile, num_bins), 1)
+           ).astype(jnp.float32)
+    oh1 = (j1[:, None] ==
+           jax.lax.broadcasted_iota(jnp.int32, (tile, num_bins), 1)
+           ).astype(jnp.float32)
+    u0 = (per_bin * oh0).sum(axis=1)
+    u1 = (per_bin * oh1).sum(axis=1)
+    u = u0 * (1.0 - frac) + u1 * frac
+    out_ref[...] = jnp.where(active, u, inf_val)
+
+
+@functools.partial(jax.jit, static_argnames=("bin_size", "tile",
+                                             "interpret"))
+def utility_lookup_pallas(state, r_w, active, table, *, bin_size: int,
+                          tile: int = 256, interpret: bool = True,
+                          inf_val: float = 3.4e38):
+    """Fused O(1)-per-PM utility lookup. table: (num_bins, M) f32."""
+    N = state.shape[0]
+    num_bins, m = table.shape
+    tile = min(tile, N)
+    assert N % tile == 0
+    return pl.pallas_call(
+        functools.partial(_lookup_kernel, num_bins=num_bins, m=m,
+                          bin_size=bin_size, inf_val=inf_val),
+        grid=(N // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((num_bins, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(state, r_w, active.astype(jnp.int32), table)
+
+
+def _hist_kernel(u_ref, edges_ref, hist_ref, *, nbins: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    u = u_ref[...]                            # (tile,)
+    edges = edges_ref[...]                    # (nbins+1,)
+    lo = edges[:-1]
+    hi = edges[1:]
+    counts = ((u[:, None] >= lo[None, :]) &
+              (u[:, None] < hi[None, :])).astype(jnp.int32).sum(axis=0)
+    hist_ref[...] += counts
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "tile", "interpret"))
+def utility_histogram_pallas(u, lo, hi, *, nbins: int = 64, tile: int = 256,
+                             interpret: bool = True):
+    """Bucket counts of u within [lo, hi) — the threshold-plan input."""
+    N = u.shape[0]
+    tile = min(tile, N)
+    assert N % tile == 0
+    edges = lo + (hi - lo) * jnp.arange(nbins + 1, dtype=jnp.float32) / nbins
+    edges = edges.at[-1].set(jnp.inf)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, nbins=nbins),
+        grid=(N // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((nbins + 1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((nbins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbins,), jnp.int32),
+        interpret=interpret,
+    )(u, edges)

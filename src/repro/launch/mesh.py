@@ -1,0 +1,25 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e-256 pod: (data=16, model=16).  Multi-pod: 2 pods = 512 chips with
+    a leading "pod" axis (data-parallel across the cross-pod DCN/ICI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (tests / examples): 1D 'data' mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# TPU v5e hardware constants (per chip) for the roofline terms.
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW_PER_LINK = 50e9       # B/s per link (~both directions combined)

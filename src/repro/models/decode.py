@@ -1,0 +1,372 @@
+"""Serving forward passes: prefill (cache build) and single-token decode.
+
+Decode attention is computed densely over the (sequence-sharded) cache —
+one token's scores over S cached positions; GSPMD turns the S-dim reductions
+into small all-reduces when the cache's sequence axis is sharded over
+"model" (the memory-critical layout for decode_32k / long_500k — see
+DESIGN.md §6).
+
+MLA decode uses weight absorption: attention runs in the compressed
+kv_lora_rank space, so the cache holds only (c_kv, k_rope) per token.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models import settings as SET
+from repro.models.transformer import (_dtype, _sinusoid, embed_inputs,
+                                      encoder, lm_head_logits)
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> PyTree:
+    dt = dtype or _dtype(cfg)
+    Ln = cfg.num_layers
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.ssm:
+        C = cfg.d_inner + 2 * cfg.ssm_state
+        cache["conv"] = jnp.zeros((Ln, batch, cfg.conv_width - 1, C), dt)
+        cache["state"] = jnp.zeros(
+            (Ln, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32)
+        if cfg.hybrid_attn_every:
+            n_app = Ln // cfg.hybrid_attn_every
+            cache["sk"] = jnp.zeros(
+                (n_app, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt)
+            cache["sv"] = jnp.zeros_like(cache["sk"])
+        return cache
+    if cfg.use_mla:
+        cache["ckv"] = jnp.zeros((Ln, batch, max_len, cfg.kv_lora_rank), dt)
+        cache["krope"] = jnp.zeros((Ln, batch, max_len, cfg.rope_head_dim),
+                                   dt)
+    else:
+        cache["k"] = jnp.zeros(
+            (Ln, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.enc_dec:
+        cache["ck"] = jnp.zeros(
+            (Ln, batch, cfg.enc_frames, cfg.num_kv_heads, cfg.head_dim), dt)
+        cache["cv"] = jnp.zeros_like(cache["ck"])
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Cached attention primitives
+# ---------------------------------------------------------------------------
+
+def _gqa_cached_attn(p: dict, x: Array, kc: Array, vc: Array, pos: Array,
+                     cfg: ModelConfig, *, update: bool = True,
+                     causal: bool = True):
+    """x: (B, d) one token; kc/vc: (B, Smax, KVH, hd).
+    Returns (out (B, d), kc, vc)."""
+    B, d = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KVH
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if update:
+        k_new = jnp.einsum("bd,dhk->bhk", x, p["wk"])
+        v_new = jnp.einsum("bd,dhk->bhk", x, p["wv"])
+        if cfg.qkv_bias:
+            k_new, v_new = k_new + p["bk"], v_new + p["bv"]
+        posv = jnp.full((B, 1), pos)
+        q = L.apply_rope(q[:, None], posv, cfg.rope_theta)[:, 0]
+        k_new = L.apply_rope(k_new[:, None], posv, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k_new.astype(kc.dtype),
+                                          (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v_new[:, None].astype(vc.dtype),
+                                          (0, pos, 0, 0))
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        valid = jnp.arange(kc.shape[1]) <= pos
+        s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w, vc.astype(jnp.float32))
+    o = o.reshape(B, H, hd).astype(x.dtype)
+    return jnp.einsum("bhk,hkd->bd", o, p["wo"]), kc, vc
+
+
+def _mla_cached_attn(p: dict, x: Array, ckv: Array, krope: Array,
+                     pos: Array, cfg: ModelConfig):
+    """Absorbed MLA decode. x: (B,d); ckv: (B,Smax,rkv); krope: (B,Smax,dr)."""
+    B, d = x.shape
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    posv = jnp.full((B, 1), pos)
+    ckv_new, krope_new = L.mla_compress(p, x[:, None], cfg, posv)
+    ckv = jax.lax.dynamic_update_slice(ckv, ckv_new.astype(ckv.dtype),
+                                       (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(krope, krope_new.astype(krope.dtype),
+                                         (0, pos, 0))
+    q_nope, q_rope = L.mla_queries(p, x[:, None], cfg, posv)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]        # (B,H,·)
+    # Absorb W_kb into the query: score in compressed space.
+    q_t = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                     p["wk_b"].astype(jnp.float32))
+    s = jnp.einsum("bhr,bsr->bhs", q_t, ckv.astype(jnp.float32)) \
+        + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                     krope.astype(jnp.float32))
+    s = s / np.sqrt(cfg.qk_head_dim)
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, ckv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", ctx, p["wv_b"].astype(jnp.float32))
+    out = jnp.einsum("bhv,hvd->bd", o.astype(x.dtype), p["wo"])
+    return out, ckv, krope
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one token for the whole batch)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
+                tokens: Array) -> tuple[Array, PyTree]:
+    """tokens: (B,) int32 — the newest token per sequence.
+    Returns (logits (B, V), updated cache)."""
+    pos = cache["pos"]
+    x = params["embed"][tokens]                        # (B, d)
+    new_cache = dict(cache)
+
+    if cfg.ssm:
+        sk = cache.get("sk")
+        sv = cache.get("sv")
+
+        def body(carry, inp):
+            x, sk, sv = carry
+            lp, conv_l, state_l, idx = inp
+            h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            h, conv_l, state_l = S.ssd_decode_step(lp["mamba"], h, conv_l,
+                                                   state_l, cfg)
+            x = x + h
+            if cfg.hybrid_attn_every:
+                def shared(args):
+                    x, sk, sv = args
+                    slot = idx // cfg.hybrid_attn_every
+                    kc = sk[slot]
+                    vc = sv[slot]
+                    sp = params["shared_attn"]
+                    h = L.rmsnorm(x, sp["norm1"], cfg.norm_eps)
+                    h, kc, vc = _gqa_cached_attn(sp["attn"], h, kc, vc, pos,
+                                                 cfg)
+                    x = x + h
+                    h = L.rmsnorm(x, sp["norm2"], cfg.norm_eps)
+                    x = x + L.mlp_block(sp["mlp"], h)
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, kc, slot, 0)
+                    sv = jax.lax.dynamic_update_index_in_dim(sv, vc, slot, 0)
+                    return x, sk, sv
+
+                x, sk, sv = jax.lax.cond(
+                    (idx + 1) % cfg.hybrid_attn_every == 0, shared,
+                    lambda a: a, (x, sk, sv))
+            return (x, sk, sv), (conv_l, state_l)
+
+        idxs = jnp.arange(cfg.num_layers)
+        (x, sk, sv), (conv, state) = SET.scan(
+            body, (x, sk, sv),
+            (params["layers"], cache["conv"], cache["state"], idxs))
+        new_cache["conv"], new_cache["state"] = conv, state
+        if cfg.hybrid_attn_every:
+            new_cache["sk"], new_cache["sv"] = sk, sv
+    else:
+        def body(x, inp):
+            if cfg.enc_dec:
+                lp, cp, kc, vc, ck, cv = inp
+            elif cfg.use_mla:
+                lp, kc, vc = inp
+            else:
+                lp, kc, vc = inp
+            h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            if cfg.use_mla:
+                h, kc, vc = _mla_cached_attn(lp["attn"], h, kc, vc, pos, cfg)
+            else:
+                h, kc, vc = _gqa_cached_attn(lp["attn"], h, kc, vc, pos, cfg)
+            x = x + h
+            if cfg.enc_dec:
+                h = L.rmsnorm(x, cp["norm"], cfg.norm_eps)
+                h, _, _ = _gqa_cached_attn(cp["attn"], h, ck, cv, pos, cfg,
+                                           update=False, causal=False)
+                x = x + h
+            h = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+            if cfg.moe:
+                h, _ = L.moe_block(lp["moe"], h[:, None], cfg)
+                h = h[:, 0]
+            elif cfg.d_ff:
+                h = L.mlp_block(lp["mlp"], h)
+            else:
+                h = jnp.zeros_like(x)
+            return x + h, (kc, vc)
+
+        if cfg.use_mla:
+            xs = (params["layers"], cache["ckv"], cache["krope"])
+        elif cfg.enc_dec:
+            xs = (params["layers"], params["cross_layers"], cache["k"],
+                  cache["v"], cache["ck"], cache["cv"])
+        else:
+            xs = (params["layers"], cache["k"], cache["v"])
+        x, (kc, vc) = SET.scan(body, x, xs)
+        if cfg.use_mla:
+            new_cache["ckv"], new_cache["krope"] = kc, vc
+        else:
+            new_cache["k"], new_cache["v"] = kc, vc
+
+    h = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head_logits(cfg, params, h[:, None])[:, 0]
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: PyTree, batch: dict, max_len: int,
+            remat: bool = True, causal_skip: bool = True
+            ) -> tuple[PyTree, Array]:
+    """Run the full prompt, building the cache.  Returns (cache, logits of
+    the last position)."""
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encoder(cfg, params, batch["frames"], remat=remat)
+    x = embed_inputs(cfg, params, batch)
+    B, Sq, _ = x.shape
+    pos = jnp.arange(Sq)
+    pad = max_len - Sq
+    cache = init_cache(cfg, B, max_len)
+
+    if cfg.ssm:
+        sk, sv = cache.get("sk"), cache.get("sv")
+
+        def body(carry, inp):
+            x, sk, sv = carry
+            lp, idx = inp
+            h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            y, state = S.ssd_forward(lp["mamba"], h, cfg)
+            # conv state tail from the last W-1 tokens' conv inputs
+            z_tail = _conv_tail(lp["mamba"], h, cfg)
+            x = x + y
+            if cfg.hybrid_attn_every:
+                def app(args):
+                    x, sk, sv = args
+                    x2, k, v = _shared_fwd_kv(cfg, params["shared_attn"], x,
+                                              causal_skip)
+                    slot = idx // cfg.hybrid_attn_every
+                    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    sk = jax.lax.dynamic_update_index_in_dim(
+                        sk, kp.astype(sk.dtype), slot, 0)
+                    sv = jax.lax.dynamic_update_index_in_dim(
+                        sv, vp.astype(sv.dtype), slot, 0)
+                    return x2, sk, sv
+
+                x, sk, sv = jax.lax.cond(
+                    (idx + 1) % cfg.hybrid_attn_every == 0, app,
+                    lambda a: a, (x, sk, sv))
+            return (x, sk, sv), (z_tail, state)
+
+        idxs = jnp.arange(cfg.num_layers)
+        (x, sk, sv), (conv, state) = SET.scan(
+            body, (x, sk, sv), (params["layers"], idxs))
+        cache["conv"] = conv.astype(cache["conv"].dtype)
+        cache["state"] = state
+        if cfg.hybrid_attn_every:
+            cache["sk"], cache["sv"] = sk, sv
+    else:
+        def body(x, inp):
+            if cfg.enc_dec:
+                lp, cp = inp
+            else:
+                (lp,) = inp
+            h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            if cfg.use_mla:
+                ckv, krope = L.mla_compress(lp["attn"], h, cfg, pos)
+                h2 = L.mla_block(lp["attn"], h, cfg, causal_skip=causal_skip)
+                kv_out = (ckv, krope)
+            else:
+                q, k, v = L.attention_qkv(lp["attn"], h, cfg, pos)
+                o = L.flash_attention(q, k, v, causal=True,
+                                      causal_skip=causal_skip)
+                h2 = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+                kv_out = (k, v)
+            x = x + h2
+            if cfg.enc_dec:
+                hn = L.rmsnorm(x, cp["norm"], cfg.norm_eps)
+                ck = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wk"])
+                cv = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wv"])
+                x = x + L.attention_block(cp["attn"], hn, cfg, causal=False,
+                                          kv_override=(ck, cv))
+            h = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+            if cfg.moe:
+                h, _ = L.moe_block(lp["moe"], h, cfg)
+            elif cfg.d_ff:
+                h = L.mlp_block(lp["mlp"], h)
+            else:
+                h = jnp.zeros_like(x)
+            extras = kv_out + ((ck, cv) if cfg.enc_dec else ())
+            return x + h, extras
+
+        xs = ((params["layers"], params["cross_layers"]) if cfg.enc_dec
+              else (params["layers"],))
+        x, extras = SET.scan(body, x, xs)
+        if cfg.use_mla:
+            ckv, krope = extras[0], extras[1]
+            cache["ckv"] = jnp.pad(
+                ckv, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(
+                    cache["ckv"].dtype)
+            cache["krope"] = jnp.pad(
+                krope, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(
+                    cache["krope"].dtype)
+        else:
+            k, v = extras[0], extras[1]
+            cache["k"] = jnp.pad(
+                k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(
+                    cache["k"].dtype)
+            cache["v"] = jnp.pad(
+                v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(
+                    cache["v"].dtype)
+        if cfg.enc_dec:
+            cache["ck"] = extras[2].astype(cache["ck"].dtype)
+            cache["cv"] = extras[3].astype(cache["cv"].dtype)
+
+    h = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head_logits(cfg, params, h[:, -1:, :])[:, 0]
+    cache["pos"] = jnp.int32(Sq)
+    return cache, logits
+
+
+def _shared_fwd_kv(cfg: ModelConfig, sp: dict, x: Array, causal_skip: bool):
+    """Shared attention block forward that also returns its K/V (for the
+    hybrid prefill cache)."""
+    h = L.rmsnorm(x, sp["norm1"], cfg.norm_eps)
+    pos = jnp.arange(x.shape[1])
+    q, k, v = L.attention_qkv(sp["attn"], h, cfg, pos)
+    o = L.flash_attention(q, k, v, causal=True, causal_skip=causal_skip)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, sp["attn"]["wo"])
+    h = L.rmsnorm(x, sp["norm2"], cfg.norm_eps)
+    x = x + L.mlp_block(sp["mlp"], h)
+    return x, k, v
+
+
+def _conv_tail(mp: dict, h: Array, cfg: ModelConfig) -> Array:
+    """Last (conv_width-1) pre-conv channel inputs — the decode conv state."""
+    xin = h @ mp["wx"]
+    Bm = h @ mp["wB"]
+    Cm = h @ mp["wC"]
+    xBC = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    return xBC[:, -(cfg.conv_width - 1):]

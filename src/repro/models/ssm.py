@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) blocks.
+
+Chunked SSD: within-chunk quadratic (attention-like, masked by the decay
+kernel) + inter-chunk linear recurrence carried by a lax.scan.  ngroups=1
+(B/C shared across heads).  Decode is the O(1)-per-token recurrent update —
+the reason mamba2/zamba2 are the archs assigned the ``long_500k`` shape.
+
+Sharding: d_inner / heads shard over "model"; B/C (d_state) replicated;
+out_proj row-parallel (psum by GSPMD).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_dense, rmsnorm
+from repro.models import settings as SET
+
+Array = jax.Array
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.conv_width
+    ks = jax.random.split(key, 7)
+    return {
+        "wz": init_dense(ks[0], d, di, dtype),
+        "wx": init_dense(ks[1], d, di, dtype),
+        "wB": init_dense(ks[2], d, ds, dtype),
+        "wC": init_dense(ks[3], d, ds, dtype),
+        "wdt": init_dense(ks[4], d, nh, dtype),
+        "conv_w": (jax.random.normal(ks[5], (W, di + 2 * ds), jnp.float32)
+                   / np.sqrt(W)).astype(dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),   # A = -exp(A_log) in (-1, 0)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "wo": init_dense(ks[6], di, d, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv, x: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out
+
+
+def _segsum(a: Array) -> Array:
+    """Lower-triangular pairwise decay: out[..., i, j] = sum_{k=j+1..i} a_k
+    for i >= j, -inf otherwise.  a: (..., L)."""
+    L = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]       # (..., i, j)
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(p: dict, x: Array, cfg: ModelConfig,
+                init_state: Array | None = None):
+    """Mamba2 block forward. x: (B,S,d) → (y: (B,S,d), final_state).
+
+    final_state: (B, nh, hd, ds) — the recurrent state after the last token
+    (used to seed decode after prefill).
+    """
+    B, S, d = x.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    S_orig = S
+    if S % Q:  # pad to a chunk multiple; outputs for real tokens are exact
+        # (causal), but final_state picks up extra decay — callers that use
+        # final_state (prefill) always pass chunk-aligned S.
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    z = x @ p["wz"]                                    # (B,S,di)
+    xin = x @ p["wx"]
+    Bm = x @ p["wB"]
+    Cm = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"])               # (B,S,nh)
+    xBC = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"]))
+    xin, Bm, Cm = xBC[..., :di], xBC[..., di:di + ds], xBC[..., di + ds:]
+
+    A = -jnp.exp(p["A_log"])                           # (nh,)
+    a = dt * A                                         # (B,S,nh) log-decay
+    xh = xin.reshape(B, S, nh, hd).astype(jnp.float32)
+    xdt = xh * dt[..., None]                           # fold dt into x
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    # chunked views
+    ac = a.reshape(B, nc, Q, nh)
+    xc = xdt.reshape(B, nc, Q, nh, hd)
+    Bc = Bm.reshape(B, nc, Q, ds)
+    Cc = Cm.reshape(B, nc, Q, ds)
+
+    # Within-chunk (diagonal blocks): Y[l] = sum_{m<=l} C[l]·B[m] L[l,m] x[m]
+    Lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (B,nc,nh,Q,Q)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)     # (B,nc,Q,Q)
+    Wt = scores[:, :, None] * Lmat.transpose(0, 1, 2, 3, 4)  # (B,nc,nh,Q,Q)
+    y_diag = jnp.einsum("bchlm,bcmhp->bclhp", Wt, xc)
+
+    # Chunk-level state contributions.
+    cum = jnp.cumsum(ac, axis=2)                       # (B,nc,Q,nh)
+    total = cum[:, :, -1]                              # (B,nc,nh)
+    # state injected by chunk c: sum_m B[m] x[m] exp(total - cum[m])
+    decay_in = jnp.exp(total[:, :, None] - cum)        # (B,nc,Q,nh)
+    S_in = jnp.einsum("bcmn,bcmh,bcmhp->bchpn", Bc, decay_in, xc)
+
+    def chunk_scan(state, inp):
+        tot, s_in, c_chunk, cum_chunk = inp
+        # y_inter[l] = C[l] · state · exp(cum[l])
+        y_int = jnp.einsum("bln,bhpn,blh->blhp", c_chunk, state,
+                           jnp.exp(cum_chunk))
+        state = state * jnp.exp(tot)[..., None, None] + s_in
+        return state, y_int
+
+    state0 = (jnp.zeros((B, nh, hd, ds), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+    xs = (total.transpose(1, 0, 2),                    # (nc,B,nh)
+          S_in.transpose(1, 0, 2, 3, 4),               # (nc,B,nh,hd,ds)
+          Cc.transpose(1, 0, 2, 3),                    # (nc,B,Q,ds)
+          cum.transpose(1, 0, 2, 3))                   # (nc,B,Q,nh)
+    final_state, y_inter = SET.scan(chunk_scan, state0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)         # (B,nc,Q,nh,hd)
+
+    y = (y_diag + y_inter).reshape(B, S, nh, hd)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, di)[:, :S_orig].astype(x.dtype)
+    y = y * jax.nn.silu(z[:, :S_orig])
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"], final_state
+
+
+def ssd_decode_step(p: dict, x: Array, conv_state: Array, ssm_state: Array,
+                    cfg: ModelConfig):
+    """One-token decode. x: (B,d); conv_state: (B,W-1,di+2ds);
+    ssm_state: (B,nh,hd,ds).  Returns (y: (B,d), conv_state, ssm_state)."""
+    B, d = x.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    z = x @ p["wz"]
+    xin = x @ p["wx"]
+    Bm = x @ p["wB"]
+    Cm = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    xBC = jnp.concatenate([xin, Bm, Cm], axis=-1)      # (B, di+2ds)
+    hist = jnp.concatenate([conv_state, xBC[:, None]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, p["conv_w"])
+    conv_state = hist[:, 1:]
+    xBC = jax.nn.silu(conv_out)
+    xin, Bm, Cm = xBC[:, :di], xBC[:, di:di + ds], xBC[:, di + ds:]
+
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                               # (B,nh)
+    xh = xin.reshape(B, nh, hd).astype(jnp.float32)
+    ssm_state = (ssm_state * dA[..., None, None]
+                 + jnp.einsum("bn,bhp,bh->bhpn", Bm.astype(jnp.float32),
+                              xh, dt))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), ssm_state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"], conv_state, ssm_state
+
+
+def ssd_reference(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    """Oracle: token-by-token recurrence (slow, exact). For tests."""
+    B, S, d = x.shape
+    W = cfg.conv_width
+    conv_state = jnp.zeros((B, W - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                           x.dtype)
+    ssm_state = jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32)
+
+    def step(carry, xt):
+        conv_state, ssm_state = carry
+        y, conv_state, ssm_state = ssd_decode_step(p, xt, conv_state,
+                                                   ssm_state, cfg)
+        return (conv_state, ssm_state), y
+
+    _, ys = jax.lax.scan(step, (conv_state, ssm_state),
+                         x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2)

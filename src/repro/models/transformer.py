@@ -1,0 +1,276 @@
+"""Model zoo: unified decoder-LM covering all six assigned families.
+
+  dense  — starcoder2/qwen1.5/internlm2/minitron (GQA, RoPE, opt. QKV bias)
+  moe    — deepseek-v3 (MLA + shared/routed experts), deepseek-moe-16b
+  ssm    — mamba2 (pure SSD, no attention, no MLP)
+  hybrid — zamba2 (mamba2 backbone + ONE shared attention+MLP block whose
+           params are reused every `hybrid_attn_every` layers)
+  vlm    — internvl2 (LM backbone; ViT frontend stubbed as patch embeddings)
+  audio  — whisper (encoder-decoder; conv frontend stubbed as frames)
+
+Backbone layers are stacked (leading L axis) and applied with lax.scan so the
+HLO is O(1) in depth.  Forward entry points:
+
+  forward_train(cfg, params, batch)        -> (loss, metrics)
+  prefill(cfg, params, batch, max_len)     -> (cache, last_logits)
+  decode_step(cfg, params, cache, tokens)  -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models import settings as SET
+
+Array = jax.Array
+PyTree = Any
+
+LOSS_CHUNK = 512
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, dtype) -> dict:
+    """One backbone layer's params (pre-stacking)."""
+    ks = jax.random.split(key, 4)
+    p = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.ssm:
+        p["mamba"] = S.init_mamba2(ks[0], cfg, dtype)
+        return p
+    if cfg.use_mla:
+        p["attn"] = L.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.moe:
+        p["moe"] = L.init_moe(ks[1], cfg, dtype)
+    elif cfg.d_ff:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_shared_attn(key, cfg: ModelConfig, dtype) -> dict:
+    """zamba2: the shared attention+MLP block (params reused at every
+    application point)."""
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_cross_layer(key, cfg: ModelConfig, dtype) -> dict:
+    return {"norm": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.init_attention(key, cfg, dtype)}
+
+
+def init_params(cfg: ModelConfig, key: Array) -> PyTree:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    scale = 1.0 / np.sqrt(cfg.d_model)
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * scale).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(keys[1], cfg.d_model,
+                                         cfg.vocab_size, dtype)
+    layer_keys = jax.random.split(keys[2], cfg.num_layers)
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    if cfg.hybrid_attn_every:
+        params["shared_attn"] = _init_shared_attn(keys[3], cfg, dtype)
+    if cfg.enc_dec:
+        ek = jax.random.split(keys[4], cfg.enc_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_enc_layer(k, cfg, dtype))(ek)
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+        ck = jax.random.split(keys[5], cfg.num_layers)
+        params["cross_layers"] = jax.vmap(
+            lambda k: _init_cross_layer(k, cfg, dtype))(ck)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill compute)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: ModelConfig, lp: dict, x: Array, *,
+               causal_skip: bool = True):
+    """One backbone layer (no cache). Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if cfg.ssm:
+        h, _ = S.ssd_forward(lp["mamba"], L.rmsnorm(x, lp["norm1"],
+                                                    cfg.norm_eps), cfg)
+        return x + h, aux
+    h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.use_mla:
+        h = L.mla_block(lp["attn"], h, cfg, causal_skip=causal_skip)
+    else:
+        h = L.attention_block(lp["attn"], h, cfg, causal_skip=causal_skip)
+    x = x + h
+    h = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.moe:
+        h, aux = L.moe_block(lp["moe"], h, cfg)
+    elif cfg.d_ff:
+        h = L.mlp_block(lp["mlp"], h)
+    else:
+        h = jnp.zeros_like(x)
+    return x + h, aux
+
+
+def _shared_attn_fwd(cfg: ModelConfig, sp: dict, x: Array,
+                     causal_skip: bool = True) -> Array:
+    h = L.rmsnorm(x, sp["norm1"], cfg.norm_eps)
+    x = x + L.attention_block(sp["attn"], h, cfg, causal_skip=causal_skip)
+    h = L.rmsnorm(x, sp["norm2"], cfg.norm_eps)
+    return x + L.mlp_block(sp["mlp"], h)
+
+
+def backbone(cfg: ModelConfig, params: PyTree, x: Array, *,
+             remat: bool = True, causal_skip: bool = True,
+             enc_out: Array | None = None) -> tuple[Array, Array]:
+    """Scan the stacked layers. Returns (hidden, total_aux_loss)."""
+
+    def body(carry, inp):
+        x, aux = carry
+        x = SET.constrain(x, "data", None, None)
+        if cfg.enc_dec:
+            lp, cp, idx = inp
+            # self-attn → cross-attn → MLP (whisper decoder order)
+            h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+            x = x + L.attention_block(lp["attn"], h, cfg,
+                                      causal_skip=causal_skip)
+            h = L.rmsnorm(x, cp["norm"], cfg.norm_eps)
+            kv = (jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wk"]),
+                  jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wv"]))
+            x = x + L.attention_block(cp["attn"], h, cfg, causal=False,
+                                      kv_override=kv)
+            h = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+            x = x + L.mlp_block(lp["mlp"], h)
+            a = jnp.float32(0.0)
+        else:
+            (lp, idx), cp = inp, None
+            x, a = _layer_fwd(cfg, lp, x, causal_skip=causal_skip)
+        if cfg.hybrid_attn_every:
+            apply_shared = (idx + 1) % cfg.hybrid_attn_every == 0
+            x = jax.lax.cond(
+                apply_shared,
+                lambda x: _shared_attn_fwd(cfg, params["shared_attn"], x,
+                                           causal_skip),
+                lambda x: x, x)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    idxs = jnp.arange(cfg.num_layers)
+    xs = ((params["layers"], params["cross_layers"], idxs) if cfg.enc_dec
+          else (params["layers"], idxs))
+    (x, aux), _ = SET.scan(body_fn, (x, jnp.float32(0.0)), xs)
+    return x, aux
+
+
+def encoder(cfg: ModelConfig, params: PyTree, frames: Array,
+            remat: bool = True) -> Array:
+    """Whisper encoder over stubbed conv-frontend frames (B, F, d)."""
+    pos = jnp.arange(frames.shape[1])
+    x = frames + _sinusoid(pos, cfg.d_model).astype(frames.dtype)
+
+    def body(x, lp):
+        h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        x = x + L.attention_block(lp["attn"], h, cfg, causal=False)
+        h = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        return x + L.mlp_block(lp["mlp"], h), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = SET.scan(body_fn, x, params["enc_layers"])
+    return L.rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _sinusoid(pos: Array, d: int) -> Array:
+    inv = 1.0 / (1e4 ** (jnp.arange(0, d, 2) / d))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)[None]
+
+
+def embed_inputs(cfg: ModelConfig, params: PyTree, batch: dict) -> Array:
+    """tokens (+ stubbed modality embeddings) → (B, S, d)."""
+    x = params["embed"][batch["tokens"]]
+    if cfg.vlm_patches and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def lm_head_logits(cfg: ModelConfig, params: PyTree, h: Array) -> Array:
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+
+
+def chunked_ce_loss(cfg: ModelConfig, params: PyTree, h: Array,
+                    labels: Array, mask: Array | None = None):
+    """Cross-entropy without materializing (B, S, V) — scan over S chunks."""
+    B, Sq, d = h.shape
+    ck = min(SET.loss_chunk(), Sq)
+    nch = Sq // ck
+    assert Sq % ck == 0
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    hm = h.reshape(B, nch, ck, d).transpose(1, 0, 2, 3)
+    ym = labels.reshape(B, nch, ck).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mm = mask.reshape(B, nch, ck).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        hc, yc, mc = inp
+        logits = jnp.einsum("bsd,dv->bsv", hc,
+                            w.astype(hc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, yc[..., None], -1)[..., 0]
+        loss = ((lse - ll) * mc).sum()
+        return (acc[0] + loss, acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = SET.scan(body, (jnp.float32(0.), jnp.float32(0.)),
+                                 (hm, ym, mm))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def forward_train(cfg: ModelConfig, params: PyTree, batch: dict,
+                  remat: bool = True, causal_skip: bool = True):
+    """batch: tokens (B,S), labels (B,S) [+ patches/frames stubs]."""
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encoder(cfg, params, batch["frames"], remat=remat)
+    x = embed_inputs(cfg, params, batch)
+    h, aux = backbone(cfg, params, x, remat=remat, causal_skip=causal_skip,
+                      enc_out=enc_out)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.vlm_patches and "patches" in batch:
+        h = h[:, batch["patches"].shape[1]:]   # loss over text positions
+    loss = chunked_ce_loss(cfg, params, h, batch["labels"],
+                           batch.get("loss_mask"))
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}

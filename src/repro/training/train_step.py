@@ -1,0 +1,42 @@
+"""The jitted training step: loss → grads → clip → AdamW."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training import optimizer as O
+
+PyTree = Any
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: O.AdamWConfig | None = None,
+                    remat: bool = True, causal_skip: bool = True):
+    opt_cfg = opt_cfg or O.AdamWConfig()
+
+    def train_step(params: PyTree, opt_state: PyTree, batch: dict):
+        def loss_fn(p):
+            return T.forward_train(cfg, p, batch, remat=remat,
+                                   causal_skip=causal_skip)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, gnorm = O.clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt_state = O.adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       step=opt_state["step"])
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, remat: bool = False):
+    def eval_step(params: PyTree, batch: dict):
+        loss, metrics = T.forward_train(cfg, params, batch, remat=remat)
+        return metrics["ce"]
+
+    return eval_step

@@ -1,0 +1,72 @@
+"""Property tests for the stream generators and classifier."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cep import patterns as pat
+from repro.data import streams
+
+
+class TestGenerators:
+    @given(st.integers(1000, 5000), st.integers(0, 10))
+    @settings(max_examples=10, deadline=None)
+    def test_stock_stream_well_formed(self, n, seed):
+        raw = streams.gen_stock(n, seed=seed)
+        assert raw.n == n
+        assert raw.type_id.min() >= 0
+        assert raw.type_id.max() < raw.num_types
+        assert set(np.unique(raw.attr)) <= {0, 1}
+
+    def test_stock_hot_fraction(self):
+        raw = streams.gen_stock(50_000, pattern_symbols=10,
+                                hot_fraction=0.9, seed=0)
+        hot = (raw.type_id < 10).mean()
+        assert abs(hot - 0.9) < 0.02
+
+    def test_soccer_striker_binding_points_backwards(self):
+        raw = streams.gen_soccer(20_000, seed=0)
+        defend = np.where(raw.attr == 1)[0]
+        strikers = np.where(raw.attr == 2)[0]
+        if len(defend) and len(strikers):
+            first_def_after = defend[defend > strikers[0]][0]
+            assert raw.group[first_def_after] >= 0
+
+    def test_bus_delays_cluster_on_hot_stops(self):
+        raw = streams.gen_bus(100_000, p_delay=0.05, burst_boost=5.0,
+                              seed=0)
+        delayed_rate = raw.attr.mean()
+        assert delayed_rate > 0.05  # boosted stops raise the average
+
+
+class TestClassifier:
+    def test_q1_classes_match_symbols(self):
+        spec = pat.make_q1(window_size=100, num_symbols=10)
+        raw = streams.gen_stock(10_000, seed=1)
+        ev = streams.classify([spec], raw, rate=100.0)
+        cls = np.asarray(ev.ev_class[:, 0])
+        rising_pattern = (raw.type_id < 10) & (raw.attr == 1)
+        assert (cls[rising_pattern] == raw.type_id[rising_pattern] + 1).all()
+        assert (cls[~rising_pattern] == 0).all()
+
+    def test_arrival_times_monotone(self):
+        spec = pat.make_q1(window_size=100)
+        raw = streams.gen_stock(1000, seed=2)
+        ev = streams.classify([spec], raw, rate=123.0)
+        arr = np.asarray(ev.arrival)
+        assert (np.diff(arr) > 0).all()
+        np.testing.assert_allclose(arr[1] - arr[0], 1 / 123.0, rtol=1e-4)
+
+    def test_ebl_priorities_in_unit_interval(self):
+        spec = pat.make_q4(any_n=3, window_size=1000, slide=100)
+        raw = streams.gen_bus(5000, seed=3)
+        ev = streams.classify([spec], raw, rate=10.0)
+        raw_prio = np.asarray(ev.ebl_raw)
+        assert raw_prio.min() >= 0.0 and raw_prio.max() <= 1.0
+
+    def test_q4_windows_open_on_slide(self):
+        spec = pat.make_q4(any_n=3, window_size=1000, slide=250)
+        raw = streams.gen_bus(2000, seed=4)
+        ev = streams.classify([spec], raw, rate=10.0)
+        opens = np.where(np.asarray(ev.ev_open[:, 0]))[0]
+        assert (opens % 250 == 0).all()
+        assert len(opens) == 8

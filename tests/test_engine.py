@@ -1,0 +1,159 @@
+"""Integration tests for the vectorized CEP engine (paper §III + §IV)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.cep import runner
+from repro.data import streams
+
+COST = dict(c_base=3e-4, c_match=6e-5, c_shed_base=1.5e-4, c_shed_pm=1.5e-6,
+            c_ebl=6e-5)
+
+
+def _stock_experiment(ws=3000, n=30000, shedders=("pspice", "pmbl", "ebl"),
+                      **kw):
+    spec = pat.make_q1(window_size=ws, num_symbols=10)
+    raw = streams.gen_stock(n, num_symbols=500, pattern_symbols=10,
+                            hot_fraction=0.9, p_class=0.03, seed=7)
+    args = dict(COST, max_pms=128, bin_size=64, latency_bound=1.0)
+    args.update(kw)
+    return runner.run_experiment([spec], raw, shedders=shedders,
+                                 rate_multiplier=1.2, **args)
+
+
+class TestGroundTruthCounting:
+    def test_seq_pattern_detects_known_plant(self):
+        """Hand-planted Q1-style sequence must be detected exactly once."""
+        spec = pat.make_q1(window_size=50, num_symbols=3)
+        cp = pat.compile_patterns([spec])
+        cfg = runner.default_config(cp, max_pms=16)
+        model = eng.make_model(cp, cfg)
+        n = 60
+        cls = np.zeros((n, 1), np.int32)
+        # classes 1,2,3 in order at positions 5, 10, 15
+        cls[5, 0], cls[10, 0], cls[15, 0] = 1, 2, 3
+        ev = eng.EventBatch(
+            ev_class=jnp.asarray(cls),
+            ev_bind=jnp.full((n, 1), -1, jnp.int32),
+            ev_open=jnp.asarray(cls == 1),
+            ev_id=jnp.zeros((n,), jnp.int32),
+            ev_rand=jnp.zeros((n,), jnp.float32),
+            ebl_raw=jnp.zeros((n,), jnp.float32),
+            arrival=jnp.arange(n, dtype=jnp.float32))
+        carry, outs = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(carry.complex_count[0]) == 1.0
+        assert float(carry.pms_created[0]) == 1.0
+
+    def test_out_of_order_not_detected(self):
+        spec = pat.make_q1(window_size=50, num_symbols=3)
+        cp = pat.compile_patterns([spec])
+        cfg = runner.default_config(cp, max_pms=16)
+        model = eng.make_model(cp, cfg)
+        n = 60
+        cls = np.zeros((n, 1), np.int32)
+        cls[5, 0], cls[10, 0], cls[15, 0] = 1, 3, 2  # wrong order
+        ev = eng.EventBatch(
+            ev_class=jnp.asarray(cls),
+            ev_bind=jnp.full((n, 1), -1, jnp.int32),
+            ev_open=jnp.asarray(cls == 1),
+            ev_id=jnp.zeros((n,), jnp.int32),
+            ev_rand=jnp.zeros((n,), jnp.float32),
+            ebl_raw=jnp.zeros((n,), jnp.float32),
+            arrival=jnp.arange(n, dtype=jnp.float32))
+        carry, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(carry.complex_count[0]) == 0.0
+
+    def test_window_expiry_kills_pm(self):
+        spec = pat.make_q1(window_size=8, num_symbols=3)
+        cp = pat.compile_patterns([spec])
+        cfg = runner.default_config(cp, max_pms=16)
+        model = eng.make_model(cp, cfg)
+        n = 60
+        cls = np.zeros((n, 1), np.int32)
+        cls[5, 0], cls[10, 0], cls[20, 0] = 1, 2, 3  # 2,3 after window end
+        ev = eng.EventBatch(
+            ev_class=jnp.asarray(cls),
+            ev_bind=jnp.full((n, 1), -1, jnp.int32),
+            ev_open=jnp.asarray(cls == 1),
+            ev_id=jnp.zeros((n,), jnp.int32),
+            ev_rand=jnp.zeros((n,), jnp.float32),
+            ebl_raw=jnp.zeros((n,), jnp.float32),
+            arrival=jnp.arange(n, dtype=jnp.float32))
+        carry, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(carry.complex_count[0]) == 0.0
+
+    def test_any_pattern_distinctness(self):
+        """Q4-style: same bus delayed twice at a stop counts once."""
+        spec = pat.make_q4(any_n=3, window_size=40, slide=40)
+        cp = pat.compile_patterns([spec])
+        cfg = runner.default_config(cp, max_pms=16)
+        model = eng.make_model(cp, cfg)
+        n = 40
+        cls = np.zeros((n, 1), np.int32)
+        ids = np.zeros(n, np.int32)
+        binds = np.zeros((n, 1), np.int32)
+        # bus 1 delayed twice, bus 2 once at stop 0: only 2 distinct → no CE
+        for i, bus in [(3, 1), (6, 1), (9, 2)]:
+            cls[i, 0] = 1
+            ids[i] = bus
+        opens = np.zeros((n, 1), bool)
+        opens[0, 0] = True
+        ev = eng.EventBatch(
+            ev_class=jnp.asarray(cls), ev_bind=jnp.asarray(binds),
+            ev_open=jnp.asarray(opens), ev_id=jnp.asarray(ids),
+            ev_rand=jnp.zeros((n,), jnp.float32),
+            ebl_raw=jnp.zeros((n,), jnp.float32),
+            arrival=jnp.arange(n, dtype=jnp.float32))
+        carry, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(carry.complex_count[0]) == 0.0
+        # third distinct bus completes it
+        cls[12, 0] = 1
+        ids[12] = 3
+        ev = ev._replace(ev_class=jnp.asarray(cls), ev_id=jnp.asarray(ids))
+        carry, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(carry.complex_count[0]) == 1.0
+
+
+@pytest.mark.slow
+class TestEndToEnd:
+    """The paper's headline behaviors on a reduced stream (§IV-B)."""
+
+    @pytest.fixture(scope="class")
+    def results(self):
+        return _stock_experiment()
+
+    def test_no_shed_run_is_lossless(self, results):
+        r = next(iter(results.values()))
+        assert r.ground_truth.pms_shed == 0
+
+    def test_latency_bound_maintained(self, results):
+        for name, r in results.items():
+            viol = (r.result.l_e > 1.01).mean()
+            assert viol < 0.02, (name, viol)
+
+    def test_shedding_happens_under_overload(self, results):
+        assert results["pspice"].result.pms_shed > 0
+        assert results["pmbl"].result.pms_shed > 0
+        assert results["ebl"].result.ebl_dropped > 0
+
+    def test_pspice_not_worse_than_random(self, results):
+        assert results["pspice"].fn <= results["pmbl"].fn + 0.05
+
+    def test_fn_bounded(self, results):
+        for name, r in results.items():
+            assert 0.0 <= r.fn <= 1.0
+
+
+class TestFig8Ablation:
+    def test_pspice_minus_flag_plumbs_through(self):
+        spec = pat.make_q1(window_size=400, num_symbols=4)
+        raw = streams.gen_stock(4000, num_symbols=50, pattern_symbols=4,
+                                hot_fraction=0.9, p_class=0.05, seed=1)
+        res = runner.run_experiment(
+            [spec], raw, shedders=("pspice",), rate_multiplier=1.2,
+            use_remaining_time=False, max_pms=64, bin_size=32, **COST)
+        assert "pspice" in res

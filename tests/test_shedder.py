@@ -1,0 +1,73 @@
+"""Tests for the load shedders (paper §III-F / §IV-A baselines)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import shedder
+
+
+class TestDropLowestUtility:
+    @given(st.integers(0, 64), st.integers(1, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_drops_exactly_rho_of_active(self, rho, n_active):
+        N = 64
+        rng = np.random.default_rng(rho * 97 + n_active)
+        active = np.zeros(N, bool)
+        active[rng.choice(N, n_active, replace=False)] = True
+        u = jnp.asarray(rng.random(N), jnp.float32)
+        u = jnp.where(jnp.asarray(active), u, jnp.inf)
+        new = shedder.drop_lowest_utility(jnp.asarray(active), u,
+                                          jnp.int32(rho))
+        dropped = n_active - int(new.sum())
+        assert dropped == min(rho, n_active)
+
+    def test_drops_the_lowest(self):
+        active = jnp.ones(6, bool)
+        u = jnp.array([5., 1., 3., 0.5, 2., 4.])
+        new = shedder.drop_lowest_utility(active, u, jnp.int32(3))
+        np.testing.assert_array_equal(
+            np.asarray(new), [True, False, True, False, False, True])
+
+    def test_never_revives_inactive(self):
+        active = jnp.array([False, True, False, True])
+        u = jnp.where(active, jnp.array([1., 2., 3., 4.]), jnp.inf)
+        new = shedder.drop_lowest_utility(active, u, jnp.int32(1))
+        assert not bool(new[0]) and not bool(new[2])
+
+
+class TestRandomDrop:
+    def test_exact_budget(self):
+        key = jax.random.PRNGKey(0)
+        active = jnp.ones(128, bool)
+        new = shedder.random_drop(key, active, jnp.int32(40))
+        assert int(new.sum()) == 88
+
+    def test_uniformity(self):
+        """Each active PM should be dropped with ~equal frequency."""
+        active = jnp.ones(16, bool)
+        counts = np.zeros(16)
+        for i in range(300):
+            new = shedder.random_drop(jax.random.PRNGKey(i), active,
+                                      jnp.int32(4))
+            counts += ~np.asarray(new)
+        freq = counts / 300
+        assert abs(freq.mean() - 0.25) < 0.01
+        assert freq.std() < 0.06
+
+
+class TestEBL:
+    def test_irrelevant_types_shed_first(self):
+        pattern_class = jnp.array([0, 1, 2, 0], jnp.int32)  # types 0,3 irrel
+        rep = jnp.array([0.0, 1.0, 2.0])
+        freq = jnp.array([0.4, 0.1, 0.1, 0.4])
+        u = shedder.ebl_type_utilities(pattern_class, rep, freq)
+        assert float(u[0]) == 0.0 and float(u[3]) == 0.0
+        assert float(u[2]) > float(u[1]) > 0
+
+    def test_drop_mask_respects_budget(self):
+        key = jax.random.PRNGKey(1)
+        types = jnp.zeros(10000, jnp.int32)
+        utils = jnp.array([0.0])
+        mask = shedder.ebl_drop_mask(key, types, utils, jnp.float32(0.3))
+        assert abs(float(mask.mean()) - 0.3) < 0.05
