@@ -108,7 +108,8 @@ def build_model(specs: Sequence[pat.PatternSpec], cfg: eng.EngineConfig,
 def run_with_shedder(specs: Sequence[pat.PatternSpec],
                      cfg: eng.EngineConfig, built: BuiltModel,
                      raw: streams.RawStream, rate: float, shedder: str,
-                     seed: int = 0) -> eng.RunResult:
+                     seed: int = 0,
+                     pattern_parallel: bool = False) -> eng.RunResult:
     cp = pat.compile_patterns(specs)
     run_cfg = dataclasses.replace(cfg, gather_stats=False, shedder=shedder)
     events = streams.classify(specs, raw, rate=rate, seed=seed)
@@ -118,7 +119,13 @@ def run_with_shedder(specs: Sequence[pat.PatternSpec],
                            ebl_raw_mean=float(
                                np.asarray(events.ebl_raw).mean()))
     carry = eng.init_carry(run_cfg, seed=seed)
-    carry, outs = eng.run_engine(run_cfg, model, events, carry)
+    if pattern_parallel:
+        # Pattern-parallel scale-out: shard the (P, N) PM store over the
+        # local device mesh (repro.dist.sharding.pm_specs / shard_map).
+        from repro.dist import sharding as SH
+        carry, outs = SH.run_engine_sharded(run_cfg, model, events, carry)
+    else:
+        carry, outs = eng.run_engine(run_cfg, model, events, carry)
     return eng.summarize(carry, outs)
 
 
@@ -143,7 +150,8 @@ def run_experiment(specs: Sequence[pat.PatternSpec], raw: streams.RawStream,
                    warm_frac: float = 0.3, latency_bound: float = 1.0,
                    bin_size: int = 64, max_pms: int = 2048,
                    use_remaining_time: bool = True,
-                   seed: int = 0, **cfg_kw) -> dict[str, ExperimentResult]:
+                   seed: int = 0, pattern_parallel: bool = False,
+                   **cfg_kw) -> dict[str, ExperimentResult]:
     """The full paper methodology on one stream; returns per-shedder results."""
     cp = pat.compile_patterns(specs)
     cfg = default_config(cp, latency_bound=latency_bound, max_pms=max_pms,
@@ -164,12 +172,14 @@ def run_experiment(specs: Sequence[pat.PatternSpec], raw: streams.RawStream,
 
     rate = built.max_rate * rate_multiplier
     gt = run_with_shedder(specs, cfg, built, raw_run, rate=rate,
-                          shedder=eng.SHED_NONE, seed=seed)
+                          shedder=eng.SHED_NONE, seed=seed,
+                          pattern_parallel=pattern_parallel)
     weights = np.array([s.weight for s in specs])
     out = {}
     for sh in shedders:
         res = run_with_shedder(specs, cfg, built, raw_run, rate=rate,
-                               shedder=sh, seed=seed)
+                               shedder=sh, seed=seed,
+                               pattern_parallel=pattern_parallel)
         out[sh] = ExperimentResult(
             shedder=sh,
             fn=res.false_negatives(gt, weights),

@@ -1,0 +1,91 @@
+"""jax version-compat shims used by the sharding subsystem.
+
+The repo targets the jax that ships in the image (0.4.x at the time of
+writing) while the call sites are written against the modern spellings.
+Everything version-dependent funnels through here:
+
+  shard_map        — ``jax.shard_map`` (0.6+) or
+                     ``jax.experimental.shard_map.shard_map`` (0.4.x).
+  abstract_mesh    — ``AbstractMesh(sizes, names)`` (0.5+) or
+                     ``AbstractMesh(((name, size), ...))`` (0.4.x).
+  use_mesh         — context manager activating a mesh: ``with mesh:``
+                     (0.4.x Mesh), ``jax.sharding.use_mesh`` or
+                     ``jax.set_mesh`` (newer).
+  get_active_mesh  — the mesh currently in scope, whichever mechanism set
+                     it (``get_abstract_mesh`` or the 0.4.x thread-local
+                     physical mesh).  Returns None when no mesh is active.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+try:                                      # jax >= 0.6
+    from jax import shard_map as _shard_map   # type: ignore[attr-defined]
+except ImportError:                       # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=None, **kw):
+    """shard_map with the replication-check kwarg translated across the
+    0.4.x (`check_rep`) → 0.6+ (`check_vma`) rename."""
+    if check_rep is not None:
+        if "check_rep" in _SM_PARAMS:
+            kw["check_rep"] = check_rep
+        elif "check_vma" in _SM_PARAMS:
+            kw["check_vma"] = check_rep
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """AbstractMesh across the 0.4.x / 0.5+ constructor change."""
+    from jax.sharding import AbstractMesh
+    axis_sizes = tuple(int(s) for s in axis_sizes)
+    axis_names = tuple(axis_names)
+    try:
+        return AbstractMesh(axis_sizes, axis_names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate `mesh` for PartitionSpec resolution inside jit/wsc."""
+    if hasattr(mesh, "__enter__"):        # 0.4.x Mesh is a context manager
+        with mesh:
+            yield mesh
+    elif hasattr(jax.sharding, "use_mesh"):
+        with jax.sharding.use_mesh(mesh):
+            yield mesh
+    else:                                 # newest API: module-level setter
+        prev = get_active_mesh()
+        jax.set_mesh(mesh)
+        try:
+            yield mesh
+        finally:
+            jax.set_mesh(prev)            # prev may be None: clears it
+
+
+def get_active_mesh():
+    """The mesh in scope (abstract or physical), or None."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        try:
+            mesh = get()
+            if mesh is not None and mesh.axis_names:
+                return mesh
+        except Exception:  # noqa: BLE001
+            pass
+    try:  # 0.4.x: `with mesh:` sets the thread-local physical mesh.
+        from jax._src import mesh as mesh_lib
+        mesh = mesh_lib.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:  # noqa: BLE001
+        pass
+    return None

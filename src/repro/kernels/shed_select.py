@@ -57,15 +57,24 @@ def _lookup_kernel(state_ref, rw_ref, active_ref, table_ref, out_ref, *,
 def utility_lookup_pallas(state, r_w, active, table, *, bin_size: int,
                           tile: int = 256, interpret: bool = True,
                           inf_val: float = 3.4e38):
-    """Fused O(1)-per-PM utility lookup. table: (num_bins, M) f32."""
+    """Fused O(1)-per-PM utility lookup. table: (num_bins, M) f32.
+
+    N need not be a tile multiple: inputs are padded with inactive slots
+    (which lower to inf_val in the kernel) and the output is sliced back.
+    """
     N = state.shape[0]
     num_bins, m = table.shape
     tile = min(tile, N)
-    assert N % tile == 0
-    return pl.pallas_call(
+    pad = (-N) % tile
+    if pad:
+        state = jnp.concatenate([state, jnp.zeros((pad,), state.dtype)])
+        r_w = jnp.concatenate([r_w, jnp.ones((pad,), r_w.dtype)])
+        active = jnp.concatenate(
+            [active, jnp.zeros((pad,), active.dtype)])
+    out = pl.pallas_call(
         functools.partial(_lookup_kernel, num_bins=num_bins, m=m,
                           bin_size=bin_size, inf_val=inf_val),
-        grid=(N // tile,),
+        grid=((N + pad) // tile,),
         in_specs=[
             pl.BlockSpec((tile,), lambda i: (i,)),
             pl.BlockSpec((tile,), lambda i: (i,)),
@@ -73,9 +82,10 @@ def utility_lookup_pallas(state, r_w, active, table, *, bin_size: int,
             pl.BlockSpec((num_bins, m), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((N + pad,), jnp.float32),
         interpret=interpret,
     )(state, r_w, active.astype(jnp.int32), table)
+    return out[:N] if pad else out
 
 
 def _hist_kernel(u_ref, edges_ref, hist_ref, *, nbins: int):
@@ -97,15 +107,21 @@ def _hist_kernel(u_ref, edges_ref, hist_ref, *, nbins: int):
 @functools.partial(jax.jit, static_argnames=("nbins", "tile", "interpret"))
 def utility_histogram_pallas(u, lo, hi, *, nbins: int = 64, tile: int = 256,
                              interpret: bool = True):
-    """Bucket counts of u within [lo, hi) — the threshold-plan input."""
+    """Bucket counts of u within [lo, hi) — the threshold-plan input.
+
+    N need not be a tile multiple: the tail pads with NaN, which fails
+    both bucket comparisons and is therefore never counted.
+    """
     N = u.shape[0]
     tile = min(tile, N)
-    assert N % tile == 0
+    pad = (-N) % tile
+    if pad:
+        u = jnp.concatenate([u, jnp.full((pad,), jnp.nan, u.dtype)])
     edges = lo + (hi - lo) * jnp.arange(nbins + 1, dtype=jnp.float32) / nbins
     edges = edges.at[-1].set(jnp.inf)
     return pl.pallas_call(
         functools.partial(_hist_kernel, nbins=nbins),
-        grid=(N // tile,),
+        grid=((N + pad) // tile,),
         in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
                   pl.BlockSpec((nbins + 1,), lambda i: (0,))],
         out_specs=pl.BlockSpec((nbins,), lambda i: (0,)),

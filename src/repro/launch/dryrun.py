@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import registry
 from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.dist import compat as DC
 from repro.dist import sharding as SH
 from repro.launch import hlo_analysis as HA
 from repro.launch import mesh as M
@@ -71,17 +72,19 @@ def build_lowered(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
     pspecs = SH.param_specs(mesh, cfg, params_s, scheme=scheme)
     batch_s = registry.input_specs(cfg, shape)
 
-    with jax.set_mesh(mesh), SET.use_scheme(scheme, attn_flip):
+    named = functools.partial(SH.named_tree, mesh)
+    with DC.use_mesh(mesh), SET.use_scheme(scheme, attn_flip):
         if shape.kind == "train":
             opt_s = jax.eval_shape(O.init_opt_state, params_s)
-            ospecs = {"m": pspecs, "v": pspecs, "step": P()}
-            bspecs = SH.batch_specs(mesh, cfg, batch_s, scheme=scheme)
+            pspecs, ospecs, bspecs = SH.train_specs(mesh, cfg, params_s,
+                                                    batch_s, scheme=scheme,
+                                                    pspecs=pspecs)
             step = make_train_step(cfg, causal_skip=causal_skip,
                                    remat=remat)
             jitted = jax.jit(
                 step,
-                in_shardings=(pspecs, ospecs, bspecs),
-                out_shardings=(pspecs, ospecs, None),
+                in_shardings=named((pspecs, ospecs, bspecs)),
+                out_shardings=(named(pspecs), named(ospecs), None),
                 donate_argnums=(0, 1) if donate else ())
             lowered = jitted.lower(params_s, opt_s, batch_s)
         elif shape.kind == "prefill":
@@ -94,21 +97,21 @@ def build_lowered(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
                 return D.prefill(cfg, params, batch, max_len=shape.seq_len,
                                  causal_skip=causal_skip)
 
-            jitted = jax.jit(pf, in_shardings=(pspecs, bspecs),
-                             out_shardings=((cspecs, P())))
+            jitted = jax.jit(pf, in_shardings=named((pspecs, bspecs)),
+                             out_shardings=named((cspecs, P())))
             lowered = jitted.lower(params_s, batch_s)
         else:  # decode
             cache_s = batch_s["cache"]
             cspecs = SH.cache_specs(mesh, cfg, cache_s)
-            tok_spec = P(SH.batch_axes(mesh, shape.global_batch))
+            tok_spec, logit_spec = SH.decode_specs(mesh, cfg,
+                                                   shape.global_batch)
 
             def dec(params, cache, tokens):
                 return D.decode_step(cfg, params, cache, tokens)
 
             jitted = jax.jit(
-                dec, in_shardings=(pspecs, cspecs, tok_spec),
-                out_shardings=(P(SH.batch_axes(mesh, shape.global_batch),
-                                 "model"), cspecs),
+                dec, in_shardings=named((pspecs, cspecs, tok_spec)),
+                out_shardings=named((logit_spec, cspecs)),
                 donate_argnums=(1,) if donate else ())
             lowered = jitted.lower(params_s, cache_s, batch_s["tokens"])
     return lowered

@@ -5,11 +5,18 @@ from __future__ import annotations
 import jax
 
 
+def production_topology(*, multi_pod: bool = False):
+    """(shape, axis_names) of the production mesh — the single source of
+    truth for both the device mesh and its abstract twin."""
+    if multi_pod:
+        return (2, 16, 16), ("pod", "data", "model")
+    return (16, 16), ("data", "model")
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e-256 pod: (data=16, model=16).  Multi-pod: 2 pods = 512 chips with
     a leading "pod" axis (data-parallel across the cross-pod DCN/ICI)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    shape, axes = production_topology(multi_pod=multi_pod)
     return jax.make_mesh(shape, axes)
 
 
@@ -17,6 +24,14 @@ def make_host_mesh():
     """Whatever devices exist locally (tests / examples): 1D 'data' mesh."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+def make_abstract_production_mesh(*, multi_pod: bool = False):
+    """Device-free AbstractMesh with the production topology — for spec
+    construction (repro.dist.sharding) without touching jax device state."""
+    from repro.dist import compat
+    shape, axes = production_topology(multi_pod=multi_pod)
+    return compat.abstract_mesh(shape, axes)
 
 
 # TPU v5e hardware constants (per chip) for the roofline terms.

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.dist import sharding as SH
+from repro.launch import mesh as M
 from repro.models import decode as D
 from repro.models import transformer as T
 from repro.serving.scheduler import (PSpiceScheduler, Request,
@@ -44,7 +46,14 @@ def main(argv=None) -> int:
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     B = args.slots
     cache = D.init_cache(cfg, B, args.max_len)
-    dec = jax.jit(lambda c, t: D.decode_step(cfg, params, c, t))
+    # Decode runs under the same cache/batch spec machinery the production
+    # dry-run lowers with, on the local host mesh (batch over "data").
+    mesh = M.make_host_mesh()
+    cspecs = SH.cache_specs(mesh, cfg, cache)
+    tok_spec, logit_spec = SH.decode_specs(mesh, cfg, B)
+    dec = jax.jit(lambda c, t: D.decode_step(cfg, params, c, t),
+                  in_shardings=SH.named_tree(mesh, (cspecs, tok_spec)),
+                  out_shardings=SH.named_tree(mesh, (logit_spec, cspecs)))
     # warm the jit + measure the real step cost
     toks = jnp.zeros((B,), jnp.int32)
     _, cache_w = dec(cache, toks)

@@ -17,6 +17,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.dist import sharding as SH
 from repro.launch import mesh as M
 from repro.models import transformer as T
 from repro.training import checkpoint as CK
@@ -63,12 +65,30 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--inject-nan-at", type=int, default=-1,
                     help="fault-injection test: corrupt loss at this step")
+    ap.add_argument("--no-shard", action="store_true",
+                    help="skip explicit in/out shardings (debug only)")
     args = ap.parse_args(argv)
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))
     opt_cfg = O.AdamWConfig(lr=args.lr, warmup_steps=10)
-    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=True))
+    if args.no_shard:
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=True))
+    else:
+        # Same spec machinery as the production dry-run, on whatever mesh
+        # exists locally: params per repro.dist rules, batch over "data".
+        mesh = M.make_host_mesh()
+        params_s = jax.eval_shape(
+            functools.partial(T.init_params, cfg), jax.random.PRNGKey(0))
+        # Specs only need shapes; step 0's real batch serves as the struct.
+        batch0 = synthetic_batch(cfg, args.batch, args.seq, 0)
+        pspecs, ospecs, bspecs = SH.train_specs(mesh, cfg, params_s,
+                                                batch0)
+        step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, remat=True),
+            in_shardings=SH.named_tree(mesh, (pspecs, ospecs, bspecs)),
+            out_shardings=(SH.named_tree(mesh, pspecs),
+                           SH.named_tree(mesh, ospecs), None))
 
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     opt_state = O.init_opt_state(params)

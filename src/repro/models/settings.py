@@ -73,7 +73,8 @@ def constrain(x, *axes):
     upgraded to ("pod", "data") when a pod axis exists in the mesh.
     """
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.dist import compat
+        mesh = compat.get_active_mesh()
         if mesh is None or not mesh.axis_names:
             return x
     except Exception:

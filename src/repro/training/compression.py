@@ -20,6 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Version-compatible shard_map (jax.shard_map moved out of experimental in
+# newer jax): callers — including the tests — should use this symbol.
+from repro.dist.compat import shard_map  # noqa: F401
+
 PyTree = Any
 
 
@@ -51,15 +55,20 @@ def compressed_psum(g: jax.Array, err: jax.Array, axis_name: str):
     """Quantize + psum(int32 accumulate) + dequantize, with error feedback.
 
     Wire bytes: 1B/element (int8) vs 4B (f32) — the scales are scalar.
+    The shards agree on a shared (max) scale BEFORE quantizing — a scalar
+    pmax — so the int32 sum dequantizes exactly; quantizing with per-shard
+    scales and dequantizing with the shared one would inflate every
+    shard's contribution to the max shard's magnitude.
     """
     corrected = g.astype(jnp.float32) + err
-    q, scale = quantize_int8(corrected)
+    local_scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+    scale = jax.lax.pmax(local_scale, axis_name)  # shared scale (scalar)
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
     new_err = corrected - dequantize_int8(q, scale)
-    # Accumulate in int32 to avoid overflow across the ring, share scales.
+    # Accumulate in int32 to avoid overflow across the ring.
     total = jax.lax.psum(q.astype(jnp.int32), axis_name)
-    scale_sum = jax.lax.pmax(scale, axis_name)  # conservative shared scale
     n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
-    mean = total.astype(jnp.float32) * scale_sum / n
+    mean = total.astype(jnp.float32) * scale / n
     return mean, new_err
 
 

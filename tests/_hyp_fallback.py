@@ -1,0 +1,90 @@
+"""Deterministic drop-in for the `hypothesis` API used by this suite.
+
+`hypothesis` is declared in requirements-dev.txt / pyproject.toml, but the
+tier-1 suite must still collect and pass where it isn't installed.  Test
+modules import it as:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp_fallback import given, settings, st
+
+When the fallback is active, every ``@given`` test becomes a pytest
+parametrization over a fixed, seeded sample of the declared strategies
+(plus the strategy corners) — the same properties, deterministic inputs.
+Only the strategy surface this suite uses is implemented (integers,
+floats with bounds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+
+import numpy as np
+import pytest
+
+_N_SAMPLES = 12
+_SEED = 0xC0FFEE
+
+
+@dataclasses.dataclass(frozen=True)
+class _Integers:
+    lo: int
+    hi: int
+
+    def sample(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+    @property
+    def corners(self):
+        return (self.lo, self.hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Floats:
+    lo: float
+    hi: float
+
+    def sample(self, rng):
+        return float(rng.uniform(self.lo, self.hi))
+
+    @property
+    def corners(self):
+        return (self.lo, self.hi)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Floats(min_value, max_value)
+
+
+st = strategies = _Strategies()
+
+
+def settings(*_a, **_kw):
+    """No-op stand-in for hypothesis.settings(...)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strats):
+    """Parametrize over a deterministic sample of the strategies."""
+    def deco(fn):
+        rng = np.random.default_rng(_SEED)
+        cases = [tuple(s.corners[0] for s in strats),
+                 tuple(s.corners[1] for s in strats)]
+        cases += [tuple(s.sample(rng) for s in strats)
+                  for _ in range(_N_SAMPLES)]
+        cases = list(dict.fromkeys(cases))   # dedupe, keep order
+        names = [p for p in inspect.signature(fn).parameters
+                 if p != "self"]
+        if len(names) == 1:                  # pytest wants bare values here
+            cases = [c[0] for c in cases]
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+    return deco

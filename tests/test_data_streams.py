@@ -1,7 +1,11 @@
 """Property tests for the stream generators and classifier."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # declared in requirements-dev.txt; deterministic
+    from _hyp_fallback import given, settings, st  # fallback sweeps
 
 from repro.cep import patterns as pat
 from repro.data import streams

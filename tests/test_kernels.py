@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import shedder
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.nfa_transition import nfa_advance_pallas
@@ -136,3 +137,97 @@ class TestShedKernels:
         kept_min_ref = np.where(np.asarray(refm), np.asarray(u),
                                 np.inf).min()
         np.testing.assert_allclose(kept_min, kept_min_ref, atol=1e-5)
+
+
+class TestShedKernelVsShedderOracle:
+    """utility_histogram_pallas exact-ρ threshold plan vs the
+    core.shedder.drop_lowest_utility oracle — tie-heavy utility
+    distributions and non-tile-multiple N (the former `assert N % tile`
+    path)."""
+
+    def _assert_matches_oracle(self, active, state, rw, table, rho,
+                               bin_size=32):
+        new = ops.shed_lowest_pallas(active, state, rw, table,
+                                     jnp.int32(rho), bin_size=bin_size,
+                                     interpret=True)
+        u = ref.utility_lookup_ref(state, rw, active, table, bin_size)
+        u_act = jnp.where(active, u, jnp.inf)
+        oracle = shedder.drop_lowest_utility(active, u_act, jnp.int32(rho))
+        n_active = int(jnp.sum(active))
+        # Exactly the oracle's drop count (min(rho, n_active))...
+        assert int(new.sum()) == int(oracle.sum())
+        assert n_active - int(new.sum()) == min(rho, n_active)
+        # ...never revives inactive slots...
+        assert not bool(jnp.any(new & ~active))
+        # ...and every dropped utility ≤ every kept utility (ties may
+        # break differently from the oracle's argsort, but the threshold
+        # must be respected).
+        dropped = np.asarray(active & ~new)
+        kept = np.asarray(new)
+        if dropped.any() and kept.any():
+            un = np.asarray(u)
+            assert un[dropped].max() <= un[kept].min() + 1e-6
+
+    @pytest.mark.parametrize("N", [77, 300, 500, 513])
+    @pytest.mark.parametrize("rho", [0, 5, 64, 1000])
+    def test_non_tile_multiple_n(self, N, rho):
+        rng = np.random.default_rng(N * 7 + rho)
+        bins, m = 16, 8
+        state = jnp.asarray(rng.integers(0, m, N), jnp.int32)
+        rw = jnp.asarray(rng.integers(1, bins * 32, N), jnp.int32)
+        active = jnp.asarray(rng.random(N) < 0.8)
+        table = jnp.asarray(rng.random((bins, m)), jnp.float32)
+        self._assert_matches_oracle(active, state, rw, table, rho)
+
+    @pytest.mark.parametrize("n_distinct", [1, 2, 3])
+    @pytest.mark.parametrize("rho", [1, 17, 100])
+    def test_tie_heavy_distributions(self, n_distinct, rho):
+        """Utility tables with only a few distinct values put (nearly) all
+        the mass in one histogram bucket — the exact-ρ tie-break on the
+        boundary-bucket remainder must still hit the budget exactly."""
+        rng = np.random.default_rng(n_distinct * 31 + rho)
+        N, bins, m = 384, 16, 8
+        levels = np.linspace(0.25, 0.75, n_distinct)
+        table = jnp.asarray(rng.choice(levels, size=(bins, m)), jnp.float32)
+        state = jnp.asarray(rng.integers(0, m, N), jnp.int32)
+        # rw pinned to exact bin edges → no interpolation → pure ties.
+        rw = jnp.asarray(rng.integers(1, bins, N) * 32, jnp.int32)
+        active = jnp.asarray(rng.random(N) < 0.9)
+        self._assert_matches_oracle(active, state, rw, table, rho)
+
+    def test_all_equal_utilities_exact_budget(self):
+        """Degenerate lo == hi histogram plan: every PM ties."""
+        N, bins, m = 200, 8, 4
+        state = jnp.zeros((N,), jnp.int32)
+        rw = jnp.full((N,), 64, jnp.int32)
+        table = jnp.full((bins, m), 0.5, jnp.float32)
+        active = jnp.ones((N,), bool)
+        for rho in (0, 1, 50, 199, 200, 999):
+            self._assert_matches_oracle(active, state, rw, table, rho)
+
+    @pytest.mark.parametrize("N", [100, 260])
+    def test_histogram_padding_not_counted(self, N):
+        """Padded tail (NaN) must not leak into any bucket."""
+        rng = np.random.default_rng(N)
+        u = jnp.asarray(rng.random(N) * 10, jnp.float32)
+        h = utility_histogram_pallas(u, jnp.float32(0.0), jnp.float32(10.0),
+                                     nbins=16, interpret=True)
+        hr = ref.histogram_ref(u, jnp.float32(0.0), jnp.float32(10.0), 16)
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+        assert int(h.sum()) == N
+
+    @pytest.mark.parametrize("N", [100, 321])
+    def test_lookup_padding_sliced_off(self, N):
+        rng = np.random.default_rng(N)
+        bins, m = 8, 4
+        state = jnp.asarray(rng.integers(0, m, N), jnp.int32)
+        rw = jnp.asarray(rng.integers(1, bins * 32, N), jnp.int32)
+        active = jnp.asarray(rng.random(N) < 0.8)
+        table = jnp.asarray(rng.random((bins, m)), jnp.float32)
+        u = utility_lookup_pallas(state, rw, active, table, bin_size=32,
+                                  interpret=True)
+        assert u.shape == (N,)
+        ur = ref.utility_lookup_ref(state, rw, active, table, 32)
+        np.testing.assert_allclose(
+            np.where(np.asarray(active), np.asarray(u), 0),
+            np.where(np.asarray(active), np.asarray(ur), 0), atol=1e-5)

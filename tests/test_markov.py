@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # declared in requirements-dev.txt; deterministic
+    from _hyp_fallback import given, settings, st  # fallback sweeps
 
 from repro.core import markov, overload, utility
 

@@ -1,0 +1,130 @@
+"""Pattern-parallel CEP sharding: pm_specs rules + run_engine_sharded
+parity with the plain engine (host mesh)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.cep import runner
+from repro.data import streams
+from repro.dist import sharding as SH
+
+
+def _cfg(num_patterns=4, **kw):
+    base = dict(num_patterns=num_patterns, max_states=4, max_classes=4,
+                max_pms=32, max_any_ids=8, ring_size=4)
+    base.update(kw)
+    return eng.EngineConfig(**base)
+
+
+class TestPMSpecs:
+    def test_pattern_axis_shards_when_divisible(self):
+        mesh = SH.abstract_mesh((4,), ("data",))
+        sp = SH.pm_specs(mesh, _cfg(num_patterns=8))
+        assert sp["pattern_axis"] == "data"
+        assert sp["carry"].pms.active == P("data", None)
+        assert sp["carry"].pms.idset == P("data", None, None)
+        assert sp["carry"].complex_count == P("data")
+        assert sp["model"].trans == P("data", None, None)
+        assert sp["events"].ev_class == P(None, "data")
+        # scalars / per-event telemetry stay replicated
+        assert sp["carry"].sim_time == P()
+        assert sp["out"].l_e == P(None)
+
+    def test_indivisible_pattern_count_falls_back_replicated(self):
+        mesh = SH.abstract_mesh((4,), ("data",))
+        sp = SH.pm_specs(mesh, _cfg(num_patterns=3))
+        assert sp["pattern_axis"] is None
+        assert sp["carry"].pms.active == P(None, None)
+        assert sp["events"].ev_class == P(None, None)
+
+    def test_missing_axis_falls_back_replicated(self):
+        mesh = SH.abstract_mesh((2, 2), ("x", "y"))
+        sp = SH.pm_specs(mesh, _cfg(num_patterns=4))
+        assert sp["pattern_axis"] is None
+
+
+def _planted_run(n_patterns, runner_fn):
+    """Plant one Q1-style SEQ completion in pattern 0; run via runner_fn."""
+    spec = pat.make_q1(window_size=50, num_symbols=3)
+    cp = pat.compile_patterns([spec] * n_patterns)
+    cfg = runner.default_config(cp, max_pms=16)
+    model = eng.make_model(cp, cfg)
+    n = 60
+    cls = np.zeros((n, n_patterns), np.int32)
+    cls[5, :], cls[10, :], cls[15, :] = 1, 2, 3   # completes in EVERY pattern
+    ev = eng.EventBatch(
+        ev_class=jnp.asarray(cls),
+        ev_bind=jnp.full((n, n_patterns), -1, jnp.int32),
+        ev_open=jnp.asarray(cls == 1),
+        ev_id=jnp.zeros((n,), jnp.int32),
+        ev_rand=jnp.zeros((n,), jnp.float32),
+        ebl_raw=jnp.zeros((n,), jnp.float32),
+        arrival=jnp.arange(n, dtype=jnp.float32))
+    return runner_fn(cfg, model, ev, eng.init_carry(cfg))
+
+
+class TestRunEngineSharded:
+    def test_parity_with_plain_engine_one_shard(self):
+        """On a 1-device mesh the shard_map path is bit-identical to the
+        plain engine (exercises the full spec/combine plumbing)."""
+        mesh1 = jax.make_mesh((1,), ("data",),
+                              devices=np.array(jax.devices()[:1]))
+        sharded = lambda *a: SH.run_engine_sharded(*a, mesh=mesh1)
+        c_plain, o_plain = _planted_run(4, eng.run_engine)
+        c_shard, o_shard = _planted_run(4, sharded)
+        np.testing.assert_array_equal(np.asarray(c_shard.complex_count),
+                                      np.asarray(c_plain.complex_count))
+        np.testing.assert_array_equal(np.asarray(c_shard.pms_created),
+                                      np.asarray(c_plain.pms_created))
+        np.testing.assert_allclose(np.asarray(o_shard.n_pm),
+                                   np.asarray(o_plain.n_pm))
+        np.testing.assert_allclose(np.asarray(o_shard.l_e),
+                                   np.asarray(o_plain.l_e), rtol=1e-6)
+        np.testing.assert_allclose(float(c_shard.sim_time),
+                                   float(c_plain.sim_time), rtol=1e-6)
+
+    def test_pattern_state_invariant_on_host_mesh(self):
+        """Pattern-state outputs (matches, spawns, global PM count) are
+        exact for ANY shard count when no shedding triggers; latency is
+        the slowest shard's clock, so it is bounded by the serial one."""
+        c_plain, o_plain = _planted_run(4, eng.run_engine)
+        c_shard, o_shard = _planted_run(4, SH.run_engine_sharded)
+        np.testing.assert_array_equal(np.asarray(c_shard.complex_count),
+                                      np.asarray(c_plain.complex_count))
+        np.testing.assert_array_equal(np.asarray(c_shard.pms_created),
+                                      np.asarray(c_plain.pms_created))
+        np.testing.assert_allclose(np.asarray(o_shard.n_pm),
+                                   np.asarray(o_plain.n_pm))
+        assert bool(jnp.all(o_shard.l_e <= o_plain.l_e + 1e-6))
+
+    def test_indivisible_fallback_still_runs(self):
+        ndev = len(jax.devices())
+        # A pattern count that can't divide any multi-device mesh axis is
+        # prime and < ndev only when ndev > 1; with 1 device the sharded
+        # path itself runs.  Either way the call must succeed.
+        c, o = _planted_run(3, SH.run_engine_sharded)
+        np.testing.assert_array_equal(np.asarray(c.complex_count),
+                                      np.ones(3))
+        assert o.l_e.shape == (60,)
+
+    def test_experiment_pattern_parallel_matches_serial(self):
+        """runner.run_experiment(pattern_parallel=True) reproduces the
+        serial pSPICE false-negative numbers on the same stream."""
+        spec = pat.make_q1(window_size=1000, num_symbols=5)
+        raw = streams.gen_stock(6000, num_symbols=100, pattern_symbols=5,
+                                hot_fraction=0.9, p_class=0.05, seed=3)
+        kw = dict(shedders=("pspice",), rate_multiplier=1.3, max_pms=64,
+                  bin_size=64, latency_bound=1.0,
+                  c_base=3e-4, c_match=6e-5, c_shed_base=1.5e-4,
+                  c_shed_pm=1.5e-6, c_ebl=6e-5)
+        serial = runner.run_experiment([spec], raw, **kw)
+        par = runner.run_experiment([spec], raw, pattern_parallel=True,
+                                    **kw)
+        np.testing.assert_allclose(par["pspice"].fn, serial["pspice"].fn,
+                                   rtol=1e-5, atol=1e-7)

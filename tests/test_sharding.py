@@ -12,9 +12,10 @@ from repro.models import transformer as T
 
 @pytest.fixture(scope="module")
 def mesh():
-    # AbstractMesh: no devices needed for spec construction.
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    # AbstractMesh with the production topology: no devices needed for
+    # spec construction (SH.abstract_mesh bridges the 0.4.x/0.5+ ctor).
+    from repro.launch import mesh as M
+    return M.make_abstract_production_mesh()
 
 
 def _specs_for(arch, mesh):
@@ -74,8 +75,7 @@ class TestBatchAndCacheSpecs:
         assert SH.batch_axes(mesh, 1) is None
 
     def test_multipod_batch_axes(self):
-        from jax.sharding import AbstractMesh
-        mp = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mp = SH.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
         assert SH.batch_axes(mp, 256) == ("pod", "data")
         assert SH.batch_axes(mp, 16) == ("data",)
 
