@@ -2,7 +2,9 @@
 
 The operator keeps a fixed-capacity dense PM store per pattern and advances
 EVERY active PM against each incoming event in one vectorized step; the whole
-stream is one ``lax.scan``.  Latency is tracked with a deterministic
+stream is one ``lax.scan`` (or, for unbounded streams, consecutive
+``run_engine_chunk`` scans driven by ``repro.runtime`` — DESIGN.md §7).
+Latency is tracked with a deterministic
 simulated-time model calibrated against the real (wall-clock) cost of the
 jitted engine — see DESIGN.md §3 "Wall-clock latency → simulated-time model".
 
@@ -194,16 +196,18 @@ def init_carry(cfg: EngineConfig, seed: int = 0,
         bind=jnp.full((P, N), -1, jnp.int32),
         idset=jnp.full((P, N, A), -1, jnp.int32),
     )
-    z = jnp.float32(0.0)
+    # Each scalar gets its OWN buffer: run_engine_chunk donates the carry,
+    # and donating one buffer aliased across several leaves is an error.
+    z = lambda: jnp.zeros((), jnp.float32)  # noqa: E731
     return Carry(
         pms=pms,
         ring=jnp.full((P, K), -1, jnp.int32),
         ring_ptr=jnp.zeros((P,), jnp.int32),
-        sim_time=z, key=jax.random.PRNGKey(seed), ebl_frac=z,
-        ema_gap=jnp.float32(1e-3), prev_arrival=z,
+        sim_time=z(), key=jax.random.PRNGKey(seed), ebl_frac=z(),
+        ema_gap=jnp.float32(1e-3), prev_arrival=z(),
         complex_count=jnp.zeros((P,), jnp.float32),
         pms_created=jnp.zeros((P,), jnp.float32),
-        pms_shed=z, shed_calls=z, overflow=z, ebl_dropped=z,
+        pms_shed=z(), shed_calls=z(), overflow=z(), ebl_dropped=z(),
         obs_counts=jnp.zeros((P, M, M), jnp.float32),
         obs_rewards=jnp.zeros((P, M, M), jnp.float32),
         lat_samples_n=jnp.zeros((lat_capacity,), jnp.float32),
@@ -350,9 +354,11 @@ def _shed_now(cfg: EngineConfig, model: EngineModel, c: Carry, i: Array,
     return c, dropped
 
 
-def _step(cfg: EngineConfig, model: EngineModel, carry: Carry,
-          ev: tuple) -> tuple[Carry, StepOut]:
-    (i, ev_class, ev_bind, ev_open, ev_id, ev_rand, ebl_raw, arrival) = ev
+def _pre_shed(cfg: EngineConfig, model: EngineModel, carry: Carry,
+              i: Array, ev_open: Array,
+              arrival: Array) -> tuple[Carry, Array, Array]:
+    """Steps 1-2 up to the overload decision: expire windows, ring
+    bookkeeping, queueing latency.  Returns (carry, l_q, n_pm)."""
     c = carry
     pms = c.pms
 
@@ -373,6 +379,13 @@ def _step(cfg: EngineConfig, model: EngineModel, carry: Carry,
     l_q = sim_time - arrival
     n_pm = pms.active.sum().astype(jnp.float32)
     c = c._replace(pms=pms, ring=ring, ring_ptr=ring_ptr, sim_time=sim_time)
+    return c, l_q, n_pm
+
+
+def _step(cfg: EngineConfig, model: EngineModel, carry: Carry,
+          ev: tuple) -> tuple[Carry, StepOut]:
+    (i, ev_class, ev_bind, ev_open, ev_id, ev_rand, ebl_raw, arrival) = ev
+    c, l_q, n_pm = _pre_shed(cfg, model, carry, i, ev_open, arrival)
 
     did_shed = jnp.bool_(False)
     if cfg.shedder in (SHED_PSPICE, SHED_PMBL):
@@ -384,6 +397,14 @@ def _step(cfg: EngineConfig, model: EngineModel, carry: Carry,
             lambda cc: _shed_now(cfg, model, cc, i, dec.rho)[0],
             lambda cc: cc, c)
         did_shed = dec.shed & (dec.rho > 0)
+    return _post_shed(cfg, model, c, ev, l_q, n_pm, did_shed)
+
+
+def _post_shed(cfg: EngineConfig, model: EngineModel, c: Carry,
+               ev: tuple, l_q: Array, n_pm: Array,
+               did_shed: Array) -> tuple[Carry, StepOut]:
+    """Steps 3-7: E-BL drop, advance/spawn, observations, simulated time."""
+    (i, ev_class, ev_bind, ev_open, ev_id, ev_rand, ebl_raw, arrival) = ev
 
     # -- 3. E-BL input drop --------------------------------------------------
     ev_dropped = jnp.bool_(False)
@@ -469,19 +490,154 @@ def _step(cfg: EngineConfig, model: EngineModel, carry: Carry,
 
 
 # ---------------------------------------------------------------------------
-# Public entry point
+# Public entry points
 # ---------------------------------------------------------------------------
+
+def _scan_events(cfg: EngineConfig, model: EngineModel, events: EventBatch,
+                 carry: Carry, start: Array) -> tuple[Carry, StepOut]:
+    """The one scan both entry points share: event indices are GLOBAL
+    (``start + arange``), so scanning a stream in consecutive chunks
+    replays the exact op sequence of one monolithic scan — window expiry,
+    ring bookkeeping and spawn open-indices all key off the global index."""
+    n = events.ev_class.shape[0]
+    idx = jnp.int32(start) + jnp.arange(n, dtype=jnp.int32)
+    xs = (idx, events.ev_class, events.ev_bind,
+          events.ev_open, events.ev_id, events.ev_rand, events.ebl_raw,
+          events.arrival)
+    step = functools.partial(_step, cfg, model)
+    return jax.lax.scan(step, carry, xs)
+
+
+def _step_lanes(cfg: EngineConfig, model: EngineModel, carry: Carry,
+                ev: tuple) -> tuple[Carry, StepOut]:
+    """Lane-batched event step for the multi-tenant runtime (DESIGN.md §7).
+
+    ``model``/``carry`` leaves have a leading (L,) lane axis; ``ev``
+    leaves are lane-stacked except the shared global index ``i`` (lanes
+    advance in lockstep).  Naively vmapping ``_step`` would turn the
+    per-lane shed ``lax.cond`` into a select that executes the O(N log N)
+    shed path on EVERY event for EVERY lane; instead the overload
+    decisions are computed batched (elementwise, cheap) and the expensive
+    shed runs under a SCALAR ``any(lane sheds)`` gate.  Per-lane results
+    stay bitwise identical to the sequential engine: lanes that shed get
+    exactly ``_shed_now``'s output, the rest keep their carry bits.
+    """
+    (i, ev_class, ev_bind, ev_open, ev_id, ev_rand, ebl_raw, arrival) = ev
+    c, l_q, n_pm = jax.vmap(
+        functools.partial(_pre_shed, cfg),
+        in_axes=(0, 0, None, 0, 0))(model, carry, i, ev_open, arrival)
+    L = l_q.shape[0]
+    did_shed = jnp.zeros((L,), bool)
+    if cfg.shedder in (SHED_PSPICE, SHED_PMBL):
+        # Elementwise over the lane axis — no vmap needed.
+        dec = ovl.detect_overload(model.f_model, model.g_model, l_q,
+                                  n_pm.astype(jnp.int32), cfg.latency_bound,
+                                  cfg.safety_buffer)
+        want = dec.shed & (dec.rho > 0)
+
+        def shed_lanes(cc: Carry) -> Carry:
+            shed_c = jax.vmap(
+                lambda m, c1, r: _shed_now(cfg, m, c1, i, r)[0])(
+                    model, cc, dec.rho)
+            sel = lambda a, b: jnp.where(                    # noqa: E731
+                want.reshape((L,) + (1,) * (a.ndim - 1)), a, b)
+            return jax.tree.map(sel, shed_c, cc)
+
+        c = jax.lax.cond(jnp.any(want), shed_lanes, lambda cc: cc, c)
+        did_shed = want
+    return jax.vmap(
+        functools.partial(_post_shed, cfg),
+        in_axes=(0, 0, (None, 0, 0, 0, 0, 0, 0, 0), 0, 0, 0))(
+            model, c, ev, l_q, n_pm, did_shed)
+
+
+def _scan_events_lanes(cfg: EngineConfig, model: EngineModel,
+                       events: EventBatch, carry: Carry,
+                       start: Array) -> tuple[Carry, StepOut]:
+    """Lane-batched ``_scan_events``: events are lane-stacked (L, n, ...);
+    the scan runs over the event axis with ``_step_lanes`` as its body.
+    Returned StepOut leaves are lane-stacked (L, n)."""
+    n = events.ev_class.shape[1]
+    idx = jnp.int32(start) + jnp.arange(n, dtype=jnp.int32)
+    ev_t = jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), events)
+    xs = (idx, ev_t.ev_class, ev_t.ev_bind, ev_t.ev_open, ev_t.ev_id,
+          ev_t.ev_rand, ev_t.ebl_raw, ev_t.arrival)
+    step = functools.partial(_step_lanes, cfg, model)
+    carry, outs = jax.lax.scan(step, carry, xs)
+    return carry, jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), outs)
+
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def run_engine(cfg: EngineConfig, model: EngineModel, events: EventBatch,
                carry: Carry) -> tuple[Carry, StepOut]:
     """Run the operator over a whole event stream (one lax.scan)."""
-    n = events.ev_class.shape[0]
-    xs = (jnp.arange(n, dtype=jnp.int32), events.ev_class, events.ev_bind,
-          events.ev_open, events.ev_id, events.ev_rand, events.ebl_raw,
-          events.arrival)
-    step = functools.partial(_step, cfg, model)
-    return jax.lax.scan(step, carry, xs)
+    return _scan_events(cfg, model, events, carry, jnp.int32(0))
+
+
+def wrap_event_index(start) -> Array:
+    """An unbounded Python event index as a wrap-safe int32 scalar.
+
+    The engine's window arithmetic is int32 differences (``i - open_idx``,
+    ``i - ring``), which stay correct across two's-complement wraparound
+    as long as windows are << 2^31 — but ``jnp.int32(start)`` raises
+    OverflowError once a streamed index reaches 2^31.  Mapping the index
+    into int32 modular space keeps the runtime's unbounded-stream claim
+    honest past 2.1B events.
+    """
+    wrapped = int(start) & 0xFFFFFFFF
+    return jnp.asarray(np.uint32(wrapped).astype(np.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("carry",))
+def run_engine_chunk(cfg: EngineConfig, model: EngineModel,
+                     events: EventBatch, carry: Carry,
+                     start: Array) -> tuple[Carry, StepOut]:
+    """One micro-batch of the chunked runtime (repro.runtime, DESIGN.md §7).
+
+    Identical semantics to ``run_engine`` restricted to events
+    ``[start, start + chunk)``; the carry is DONATED so the steady-state
+    loop reuses its buffers (constant memory over an unbounded stream).
+    ``start`` is a traced scalar, so every same-length chunk hits one
+    compiled executable — zero retraces while streaming.
+    """
+    return _scan_events(cfg, model, events, carry, start)
+
+
+def merge_carries(stacked: Carry, axis: int = 0) -> Carry:
+    """Fold an L-lane-stacked carry (every leaf has a leading lane axis)
+    into one flat carry over L·P patterns — the lane-merge used by the
+    runtime's telemetry and by model refresh over multi-tenant state.
+
+    Pattern-dim state (PM store, rings, per-pattern counters, obs
+    matrices) concatenates along the pattern axis; scalar counters sum;
+    clocks take the slowest lane (``max``, mirroring the sharded engine's
+    pmax semantics in repro.dist); the latency ring keeps per-slot global
+    PM counts (sum) against the slowest lane's per-event time (max).
+    """
+    def _flat(x):  # (L, P, ...) -> (L·P, ...)
+        x = jnp.moveaxis(x, axis, 0)
+        return x.reshape((-1,) + x.shape[2:])
+
+    pms = PMStore(*[_flat(x) for x in stacked.pms])
+    mx = lambda x: x.max(axis=axis)          # noqa: E731
+    sm = lambda x: x.sum(axis=axis)          # noqa: E731
+    first = lambda x: jnp.take(x, 0, axis=axis)  # noqa: E731
+    return Carry(
+        pms=pms, ring=_flat(stacked.ring), ring_ptr=_flat(stacked.ring_ptr),
+        sim_time=mx(stacked.sim_time), key=first(stacked.key),
+        ebl_frac=mx(stacked.ebl_frac), ema_gap=mx(stacked.ema_gap),
+        prev_arrival=mx(stacked.prev_arrival),
+        complex_count=_flat(stacked.complex_count),
+        pms_created=_flat(stacked.pms_created),
+        pms_shed=sm(stacked.pms_shed), shed_calls=sm(stacked.shed_calls),
+        overflow=sm(stacked.overflow), ebl_dropped=sm(stacked.ebl_dropped),
+        obs_counts=_flat(stacked.obs_counts),
+        obs_rewards=_flat(stacked.obs_rewards),
+        lat_samples_n=sm(stacked.lat_samples_n),
+        lat_samples_l=mx(stacked.lat_samples_l),
+        lat_ptr=mx(stacked.lat_ptr),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -137,10 +137,12 @@ class ExperimentResult:
     max_rate: float
     result: eng.RunResult
     ground_truth: eng.RunResult
+    latency_bound: float = 1.0  # the configured LB the run was held to
 
     @property
     def lb_violations(self) -> float:
-        return float((self.result.l_e > 0).mean())
+        """Fraction of events whose latency exceeded the configured bound."""
+        return float((self.result.l_e > self.latency_bound).mean())
 
 
 def run_experiment(specs: Sequence[pat.PatternSpec], raw: streams.RawStream,
@@ -186,5 +188,6 @@ def run_experiment(specs: Sequence[pat.PatternSpec], raw: streams.RawStream,
             match_probability=float(
                 gt.complex_count.sum() / max(gt.pms_created.sum(), 1.0)),
             max_rate=built.max_rate,
-            result=res, ground_truth=gt)
+            result=res, ground_truth=gt,
+            latency_bound=latency_bound)
     return out

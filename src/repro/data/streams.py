@@ -53,15 +53,57 @@ def gen_stock(n: int, num_symbols: int = 500, pattern_symbols: int = 10,
     p_class controls the per-tick probability that a pattern-symbol quote is
     a matchable rise — i.e. the completion-time scale, hence (via the window
     size) the match probability, the paper's Fig. 5 x-axis.
+
+    The stationary special case of ``gen_stock_drift`` (same RNG draw
+    order, so identical seeds give identical streams).
+    """
+    return gen_stock_drift(n, num_symbols=num_symbols,
+                           pattern_symbols=pattern_symbols,
+                           hot_fraction=hot_fraction,
+                           p_class=p_class, p_class_end=p_class, seed=seed)
+
+
+def gen_stock_drift(n: int, num_symbols: int = 500,
+                    pattern_symbols: int = 10,
+                    hot_fraction: float = 0.9,
+                    hot_fraction_end: float | None = None,
+                    p_class: float = 0.03, p_class_end: float = 0.10,
+                    seed: int = 0) -> RawStream:
+    """NYSE-like stream whose statistics DRIFT across the stream: the
+    matchable-rise probability (and optionally the hot-symbol share) ramps
+    linearly from its start to its end value.
+
+    This is the regime the runtime's online model refresh exists for
+    (repro.runtime.refresh, DESIGN.md §7): a model built on the head of
+    the stream has stale transition probabilities — hence stale completion
+    probabilities and utilities — by the tail.  A one-shot builder keeps
+    shedding by the head's statistics; a refreshing runtime tracks the
+    ramp.
     """
     rng = np.random.default_rng(seed)
+    t = np.arange(n) / max(n - 1, 1)
+    hot_frac = hot_fraction if hot_fraction_end is None else \
+        hot_fraction + (hot_fraction_end - hot_fraction) * t
+    p_cls = p_class + (p_class_end - p_class) * t
     hot = rng.integers(0, pattern_symbols, size=n)
     cold = rng.integers(pattern_symbols, num_symbols, size=n)
-    is_hot = rng.random(n) < hot_fraction
+    is_hot = rng.random(n) < hot_frac
     type_id = np.where(is_hot, hot, cold).astype(np.int32)
-    rise = ((rng.random(n) < p_class) & is_hot).astype(np.int32)
+    rise = ((rng.random(n) < p_cls) & is_hot).astype(np.int32)
     return RawStream(kind="stock", n=n, type_id=type_id, attr=rise,
                      group=np.zeros(n, np.int32), num_types=num_symbols)
+
+
+def drifting_arrivals(n: int, rate: float, rate_end: float) -> np.ndarray:
+    """Arrival times for a linearly drifting event rate (events/second):
+    the instantaneous rate ramps rate → rate_end over the stream, so the
+    operator's load — and the overload detector's headroom — shifts under
+    it mid-run."""
+    t = np.arange(n) / max(n - 1, 1)
+    inst = rate + (rate_end - rate) * t
+    gaps = 1.0 / np.maximum(inst, 1e-9)
+    arr = np.cumsum(gaps) - gaps[0]
+    return arr.astype(np.float32)
 
 
 def gen_soccer(n: int, num_players: int = 32, num_strikers: int = 2,
@@ -180,9 +222,12 @@ def ebl_event_priorities(specs: Sequence[pat.PatternSpec], raw: RawStream,
 
 
 def classify(specs: Sequence[pat.PatternSpec], raw: RawStream, rate: float,
-             seed: int = 0) -> EventBatch:
+             seed: int = 0, rate_end: float | None = None) -> EventBatch:
     """Build the engine's EventBatch: per-pattern class/bind/open + arrival
-    times for the given input event rate (events/second)."""
+    times for the given input event rate (events/second).  With
+    ``rate_end`` the arrival rate ramps linearly rate → rate_end
+    (``drifting_arrivals``) — the drifting-load workload for the streaming
+    runtime's online refresh."""
     P = len(specs)
     cls = np.zeros((raw.n, P), np.int32)
     bind = np.zeros((raw.n, P), np.int32)
@@ -193,6 +238,8 @@ def classify(specs: Sequence[pat.PatternSpec], raw: RawStream, rate: float,
             spec, raw)
     ebl_raw = ebl_event_priorities(specs, raw, pot)
     rng = np.random.default_rng(seed + 1234)
+    arrival = (np.arange(raw.n) / rate).astype(np.float32) \
+        if rate_end is None else drifting_arrivals(raw.n, rate, rate_end)
     return EventBatch(
         ev_class=jnp.asarray(cls),
         ev_bind=jnp.asarray(bind),
@@ -200,5 +247,5 @@ def classify(specs: Sequence[pat.PatternSpec], raw: RawStream, rate: float,
         ev_id=jnp.asarray(raw.type_id),
         ev_rand=jnp.asarray(rng.random(raw.n), dtype=jnp.float32),
         ebl_raw=jnp.asarray(ebl_raw),
-        arrival=jnp.asarray(np.arange(raw.n) / rate, dtype=jnp.float32),
+        arrival=jnp.asarray(arrival),
     )

@@ -19,6 +19,9 @@ One module owns every PartitionSpec in the system:
       the data axis (pattern-parallel).
   run_engine_sharded(...)                 — shard_map over run_engine
       using pm_specs, so multi-query workloads scale past one device.
+  lane_specs / run_chunk_lanes_sharded    — the runtime's tenant lanes
+      (repro.runtime, DESIGN.md §7): lane axis over "data", per-lane
+      pattern axis over "model", so lanes × patterns cover a 2-D mesh.
 
 Every rule goes through `_fit`, which drops any axis assignment that does
 not divide the dimension — specs are correct by construction on any mesh.
@@ -26,6 +29,7 @@ not divide the dimension — specs are correct by construction on any mesh.
 from __future__ import annotations
 
 import dataclasses
+from functools import lru_cache
 from typing import Any
 
 import jax
@@ -337,6 +341,38 @@ def pm_specs(mesh, cfg, axis: str = "data") -> dict:
             "pattern_axis": pax}
 
 
+def _merge_pattern_shards(new_c, outs, axis: str):
+    """Cross-shard telemetry merge for a pattern-sharded engine run: each
+    shard is its own simulated parallel operator, so clocks take the
+    slowest shard (pmax), counters aggregate (psum), and the latency ring
+    pairs global PM counts with the slowest shard's per-event time.  Used
+    by ``run_engine_sharded`` and, vmapped over tenant lanes, by
+    ``run_chunk_lanes_sharded``."""
+    from repro.cep import engine as eng
+
+    psum = lambda x: jax.lax.psum(x, axis)              # noqa: E731
+    pmax = lambda x: jax.lax.pmax(x, axis)              # noqa: E731
+    new_c = new_c._replace(
+        sim_time=pmax(new_c.sim_time),     # parallel shards: slowest
+        key=pmax(new_c.key),               # shed-dependent; any valid
+        ebl_frac=pmax(new_c.ebl_frac),     # conservative drop frac
+        pms_shed=psum(new_c.pms_shed),
+        shed_calls=psum(new_c.shed_calls),
+        overflow=psum(new_c.overflow),
+        ebl_dropped=psum(new_c.ebl_dropped),
+        # latency-model samples: global PM count vs the slowest
+        # shard's per-event time — the (n, l) pairs the parallel
+        # operator's overload detector should fit.
+        lat_samples_n=psum(new_c.lat_samples_n),
+        lat_samples_l=pmax(new_c.lat_samples_l))
+    outs = eng.StepOut(
+        l_e=pmax(outs.l_e),
+        n_pm=psum(outs.n_pm),
+        shed=pmax(outs.shed.astype(jnp.int32)) > 0,
+        dropped=pmax(outs.dropped.astype(jnp.int32)) > 0)
+    return new_c, outs
+
+
 def run_engine_sharded(cfg, model, events, carry, mesh=None,
                        axis: str = "data"):
     """Pattern-parallel shard_map over run_engine.
@@ -366,27 +402,7 @@ def run_engine_sharded(cfg, model, events, carry, mesh=None,
 
     def local_run(model, events, carry):
         new_c, outs = eng.run_engine(local_cfg, model, events, carry)
-        psum = lambda x: jax.lax.psum(x, axis)              # noqa: E731
-        pmax = lambda x: jax.lax.pmax(x, axis)              # noqa: E731
-        new_c = new_c._replace(
-            sim_time=pmax(new_c.sim_time),     # parallel shards: slowest
-            key=pmax(new_c.key),               # shed-dependent; any valid
-            ebl_frac=pmax(new_c.ebl_frac),     # conservative drop frac
-            pms_shed=psum(new_c.pms_shed),
-            shed_calls=psum(new_c.shed_calls),
-            overflow=psum(new_c.overflow),
-            ebl_dropped=psum(new_c.ebl_dropped),
-            # latency-model samples: global PM count vs the slowest
-            # shard's per-event time — the (n, l) pairs the parallel
-            # operator's overload detector should fit.
-            lat_samples_n=psum(new_c.lat_samples_n),
-            lat_samples_l=pmax(new_c.lat_samples_l))
-        outs = eng.StepOut(
-            l_e=pmax(outs.l_e),
-            n_pm=psum(outs.n_pm),
-            shed=pmax(outs.shed.astype(jnp.int32)) > 0,
-            dropped=pmax(outs.dropped.astype(jnp.int32)) > 0)
-        return new_c, outs
+        return _merge_pattern_shards(new_c, outs, axis)
 
     mapped = compat.shard_map(
         local_run, mesh=mesh,
@@ -395,3 +411,109 @@ def run_engine_sharded(cfg, model, events, carry, mesh=None,
         check_rep=False)
     with compat.use_mesh(mesh):
         return mapped(model, events, carry)
+
+
+# ---------------------------------------------------------------------------
+# Runtime tenant lanes: lanes × patterns over the mesh (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def _prepend_axis(spec_tree, lane_ax):
+    """Grow every PartitionSpec in a pytree by a leading lane entry."""
+    return jax.tree.map(lambda s: P(lane_ax, *s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def lane_specs(mesh, cfg, num_lanes: int, lane_axis: str = "data",
+               pattern_axis: str | None = "model") -> dict:
+    """Specs for lane-stacked runtime state: pm_specs with a leading lane
+    dim.
+
+    Lanes (independent tenants) shard over ``lane_axis``; within each lane
+    the (P, N) PM store may additionally shard its pattern dim over
+    ``pattern_axis`` — the lanes × patterns composition that covers a 2-D
+    mesh.  Either axis falls back to replicated (None) when missing from
+    the mesh, equal to the other, or not dividing its dim; with both
+    fallen back the caller should use the plain vmapped path.
+
+    Returns {"carry", "model", "events", "out", "lane_axis",
+    "pattern_axis"}.
+    """
+    lax_ok = (lane_axis in mesh.axis_names
+              and num_lanes % _axis_size(mesh, (lane_axis,)) == 0)
+    lane_ax = lane_axis if lax_ok else None
+    pax_name = pattern_axis if pattern_axis != lane_axis else None
+    inner = pm_specs(mesh, cfg, axis=pax_name or "__none__")
+    return {
+        "carry": _prepend_axis(inner["carry"], lane_ax),
+        "model": _prepend_axis(inner["model"], lane_ax),
+        "events": _prepend_axis(inner["events"], lane_ax),
+        "out": _prepend_axis(inner["out"], lane_ax),
+        "lane_axis": lane_ax,
+        "pattern_axis": inner["pattern_axis"],
+    }
+
+
+@lru_cache(maxsize=8)
+def _default_lane_mesh(lane_axis: str):
+    ndev = len(jax.devices())
+    return jax.make_mesh((ndev,), (lane_axis,))
+
+
+@lru_cache(maxsize=32)
+def _lanes_sharded_fn(cfg, mesh, num_lanes: int, lane_axis: str,
+                      pattern_axis: str | None):
+    """The shard-mapped, jitted, carry-donating lane chunk step — built
+    ONCE per (cfg, mesh, lane count, axes) and cached, so the runtime's
+    steady-state loop hits one compiled executable per chunk shape (no
+    per-chunk retrace) and keeps the donation invariant of the non-mesh
+    paths.  Returns None when neither axis can shard."""
+    from repro.cep import engine as eng
+
+    specs = lane_specs(mesh, cfg, num_lanes, lane_axis=lane_axis,
+                       pattern_axis=pattern_axis)
+    lane_ax, pax = specs["lane_axis"], specs["pattern_axis"]
+    if lane_ax is None and pax is None:
+        return None
+    local_cfg = cfg if pax is None else dataclasses.replace(
+        cfg, num_patterns=cfg.num_patterns // _axis_size(mesh, (pax,)))
+
+    def local_run(model, events, carry, start):
+        new_c, outs = eng._scan_events_lanes(local_cfg, model, events,
+                                             carry, start[0])
+        if pax is not None:
+            new_c, outs = _merge_pattern_shards(new_c, outs, pax)
+        return new_c, outs
+
+    mapped = compat.shard_map(
+        local_run, mesh=mesh,
+        in_specs=(specs["model"], specs["events"], specs["carry"], P(None)),
+        out_specs=(specs["carry"], specs["out"]),
+        check_rep=False)
+    return jax.jit(mapped, donate_argnums=(2,))
+
+
+def run_chunk_lanes_sharded(cfg, model, events, carry, start, mesh=None,
+                            lane_axis: str = "data",
+                            pattern_axis: str | None = "model"):
+    """Mesh-parallel chunk step for the multi-tenant runtime.
+
+    shard_map over ``lane_specs``: each device block runs a lane-batched
+    ``_scan_events_lanes`` over its local lanes × local pattern slice.
+    Lanes are independent, so the lane axis needs no collectives; a
+    sharded pattern axis gets the same per-lane telemetry merge as
+    ``run_engine_sharded`` (psum counters, pmax clocks), vmapped over the
+    lane dim.  The carry is donated, like the non-mesh chunk steps.
+    Falls back to the plain lane-batched ``run_chunk_lanes`` when
+    neither axis can shard (e.g. a one-axis mesh already consumed by
+    lanes still shards — a no-axis fit does not).
+    """
+    from repro.runtime import lanes as LN
+
+    num_lanes = events.ev_class.shape[0]
+    if mesh is None:
+        mesh = _default_lane_mesh(lane_axis)
+    fn = _lanes_sharded_fn(cfg, mesh, num_lanes, lane_axis, pattern_axis)
+    if fn is None:
+        return LN.run_chunk_lanes(cfg, model, events, carry, start)
+    with compat.use_mesh(mesh):
+        return fn(model, events, carry, jnp.asarray(start, jnp.int32)[None])

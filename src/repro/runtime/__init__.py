@@ -1,0 +1,29 @@
+"""repro.runtime — multi-tenant streaming runtime over the CEP engine.
+
+The layer between the engine (one scan) and the serving surfaces:
+chunked ingestion with a donated carry (constant-memory unbounded
+streams), online Markov/utility model refresh between chunks, vmapped
+tenant lanes, and per-chunk telemetry.  See DESIGN.md §7.
+"""
+from repro.runtime.chunker import (ChunkBuffer, concat_events, iter_chunks,
+                                   num_events, slice_events)
+from repro.runtime.lanes import (broadcast_model, init_lane_carries,
+                                 num_lanes, run_chunk_lanes, stack,
+                                 unstack_lane)
+from repro.runtime.refresh import (RefreshConfig, RefreshState,
+                                   prepare_model, refit_latency_model,
+                                   refresh_model, table_width)
+from repro.runtime.service import (MultiTenantRuntime, RuntimeConfig,
+                                   StreamRuntime)
+from repro.runtime.telemetry import (ChunkStats, TelemetryLog,
+                                     counter_snapshot, summarize_chunk)
+
+__all__ = [
+    "ChunkBuffer", "concat_events", "iter_chunks", "num_events",
+    "slice_events", "broadcast_model", "init_lane_carries", "num_lanes",
+    "run_chunk_lanes", "stack", "unstack_lane", "RefreshConfig",
+    "RefreshState", "prepare_model", "refit_latency_model", "refresh_model",
+    "table_width",
+    "MultiTenantRuntime", "RuntimeConfig", "StreamRuntime", "ChunkStats",
+    "TelemetryLog", "counter_snapshot", "summarize_chunk",
+]

@@ -1,0 +1,97 @@
+"""Chunked ingestion: fixed-size micro-batches over unbounded streams
+(DESIGN.md §7).
+
+``run_engine`` scans a fully materialized stream; a deployed operator sees
+an unbounded one.  The chunker turns any sequence of ``EventBatch`` pushes
+into fixed-size chunks: full chunks stream through ONE compiled executable
+of ``run_engine_chunk`` (the chunk start index is a traced scalar), the
+remainder is buffered until the next push, and ``drain`` flushes it as one
+smaller tail chunk (a single extra compile at most).  Because event
+indices are global, chunked execution is bitwise-identical to the
+monolithic scan — tests/test_runtime.py proves it per chunk size.
+
+``axis`` selects the event axis: 0 for plain event batches, 1 for
+lane-stacked ones (leading ``(L,)`` lane axis, repro.runtime.lanes).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.cep.engine import EventBatch
+
+
+def num_events(events: EventBatch, axis: int = 0) -> int:
+    return jax.tree.leaves(events)[0].shape[axis]
+
+
+def _take(x, start: int, stop: int, axis: int):
+    idx = [slice(None)] * axis + [slice(start, stop)]
+    return x[tuple(idx)]
+
+
+def slice_events(events: EventBatch, start: int, stop: int,
+                 axis: int = 0) -> EventBatch:
+    return jax.tree.map(lambda x: _take(x, start, stop, axis), events)
+
+
+def concat_events(a: EventBatch | None, b: EventBatch,
+                  axis: int = 0) -> EventBatch:
+    if a is None or num_events(a, axis) == 0:
+        return b
+    return jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=axis),
+                        a, b)
+
+
+def iter_chunks(events: EventBatch, chunk_size: int, start: int = 0,
+                axis: int = 0) -> Iterator[tuple[int, EventBatch]]:
+    """Yield ``(global_start, chunk)`` pairs covering ``events``; the last
+    chunk may be shorter (non-divisor streams are first-class)."""
+    n = num_events(events, axis)
+    for s in range(0, n, chunk_size):
+        yield start + s, slice_events(events, s, min(s + chunk_size, n),
+                                      axis)
+
+
+class ChunkBuffer:
+    """Reorders arbitrary-size pushes into fixed-size chunks.
+
+    ``push`` returns the full chunks now available (each tagged with its
+    global start index); a trailing remainder stays buffered.  ``drain``
+    returns the remainder as one final short chunk.
+    """
+
+    def __init__(self, chunk_size: int, axis: int = 0):
+        if chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive: {chunk_size}")
+        self.chunk_size = chunk_size
+        self.axis = axis
+        self._pending: EventBatch | None = None
+        self._next_start = 0  # global index of the first buffered event
+
+    @property
+    def pending(self) -> int:
+        return 0 if self._pending is None \
+            else num_events(self._pending, self.axis)
+
+    def push(self, events: EventBatch) -> list[tuple[int, EventBatch]]:
+        buf = concat_events(self._pending, events, self.axis)
+        n = num_events(buf, self.axis)
+        n_full = (n // self.chunk_size) * self.chunk_size
+        chunks = list(iter_chunks(slice_events(buf, 0, n_full, self.axis),
+                                  self.chunk_size, start=self._next_start,
+                                  axis=self.axis))
+        self._pending = slice_events(buf, n_full, n, self.axis) \
+            if n > n_full else None
+        self._next_start += n_full
+        return chunks
+
+    def drain(self) -> list[tuple[int, EventBatch]]:
+        if self._pending is None:
+            return []
+        out = [(self._next_start, self._pending)]
+        self._next_start += num_events(self._pending, self.axis)
+        self._pending = None
+        return out

@@ -1,0 +1,75 @@
+"""Tenant lanes: vmapped multi-stream execution (DESIGN.md §7).
+
+A lane is one tenant's independent operator: its own event stream (own
+arrival rate), its own carry, its own utility tables / latency model.  All
+lanes share one static ``EngineConfig``, so the per-chunk step vmaps over
+the lane axis — L scans collapse into ONE scan of lane-batched ops, which
+is where the multi-tenant throughput win comes from (bench_runtime.py).
+
+Lane-stacked pytrees are ordinary ``EngineModel`` / ``EventBatch`` /
+``Carry`` structures whose every leaf grew a leading ``(L,)`` axis; build
+them with ``stack`` / ``broadcast_model``, recover one lane with
+``unstack_lane``.  For meshes, ``repro.dist.sharding.run_chunk_lanes_sharded``
+shard_maps this same vmapped step so lanes × patterns spread across
+devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.cep import engine as eng
+
+PyTree = Any
+
+
+def stack(trees: Sequence[PyTree]) -> PyTree:
+    """Stack per-lane pytrees (models, carries, event batches) on axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_lane(tree: PyTree, lane: int) -> PyTree:
+    return jax.tree.map(lambda x: x[lane], tree)
+
+
+def num_lanes(tree: PyTree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+def broadcast_model(model: eng.EngineModel, n: int) -> eng.EngineModel:
+    """Replicate one model across n lanes (lanes may diverge later via
+    per-lane refresh — each lane's tables refit from its own carry)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(jnp.asarray(x)[None],
+                                   (n,) + jnp.asarray(x).shape).copy(),
+        model)
+
+
+def init_lane_carries(cfg: eng.EngineConfig, n: int, seed: int = 0,
+                      lat_capacity: int = 4096) -> eng.Carry:
+    """n independent carries (distinct PRNG streams), lane-stacked."""
+    return stack([eng.init_carry(cfg, seed=seed + i,
+                                 lat_capacity=lat_capacity)
+                  for i in range(n)])
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("carry",))
+def run_chunk_lanes(cfg: eng.EngineConfig, model: eng.EngineModel,
+                    events: eng.EventBatch, carry: eng.Carry,
+                    start: jax.Array) -> tuple[eng.Carry, eng.StepOut]:
+    """Lane-batched ``run_engine_chunk`` over the leading lane axis.
+
+    ``start`` is shared: lanes advance in lockstep over aligned chunk
+    windows (each lane still has its own arrival clock inside its
+    EventBatch).  The lane-stacked carry is donated, like the single-lane
+    chunk step.  Uses the engine's ``_step_lanes`` body — a scalar
+    any-lane shed gate instead of vmapping the per-lane ``lax.cond``
+    (which would run the expensive shed path every event) — and stays
+    bitwise-identical per lane to running each lane through
+    ``run_engine`` on its own (tests/test_runtime.py).
+    """
+    return eng._scan_events_lanes(cfg, model, events, carry, start)

@@ -1,0 +1,187 @@
+"""The streaming runtime: chunk lifecycle orchestration (DESIGN.md §7).
+
+``StreamRuntime`` (one tenant) and ``MultiTenantRuntime`` (L vmapped tenant
+lanes) drive the engine chunk-by-chunk over unbounded streams:
+
+    push(events) ─→ ChunkBuffer ─→ [run_engine_chunk / run_chunk_lanes]
+         ▲                              │ donated carry, traced start
+         │ host-side control            ▼
+         └── telemetry ◄── refresh? ◄── counters
+
+Between chunks the host reads telemetry, and — on the refresh cadence —
+re-estimates the Markov/utility model and the latency regression from the
+carry's accumulated observations (``repro.runtime.refresh``), so the
+shedder tracks drifting stream statistics.  The carry is donated into
+every chunk, so steady-state memory is constant regardless of how long
+the stream runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.runtime import chunker, lanes as LN, refresh as RF, telemetry as TM
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    chunk_size: int = 1024
+    refresh: RF.RefreshConfig | None = None
+
+
+class StreamRuntime:
+    """Single-tenant chunked runtime over one event stream.
+
+    ``push`` ingests any number of events (the tail shorter than a chunk
+    stays buffered); ``flush`` drains the remainder.  Chunked execution is
+    bitwise-identical to one monolithic ``run_engine`` scan of the same
+    events — chunking changes memory behavior and control cadence, never
+    results.
+    """
+
+    def __init__(self, cfg: eng.EngineConfig, model: eng.EngineModel,
+                 rt: RuntimeConfig | None = None,
+                 specs: Sequence[pat.PatternSpec] | None = None,
+                 carry: eng.Carry | None = None, seed: int = 0):
+        self.cfg = cfg
+        self.model = model
+        self.rt = rt or RuntimeConfig()
+        self.specs = list(specs) if specs is not None else None
+        if self._refresh_on() and not cfg.gather_stats:
+            raise ValueError("model refresh needs cfg.gather_stats=True "
+                             "(the carry must accumulate observations)")
+        if self._refresh_on() and self.specs is None:
+            raise ValueError("model refresh needs the PatternSpec list")
+        if self._refresh_on():
+            # Refresh must never change array shapes mid-stream (that
+            # would retrace the chunk executable): widen the utility
+            # tables to refresh width up front.
+            self.model = RF.prepare_model(self.specs, self.model,
+                                          self.rt.refresh)
+        self.carry = carry if carry is not None else eng.init_carry(
+            cfg, seed=seed)
+        self.telemetry = TM.TelemetryLog()
+        self.refresh_state = RF.RefreshState()
+        self._buf = chunker.ChunkBuffer(self.rt.chunk_size)
+        self._chunk_i = 0
+        self.events_processed = 0
+        self._snapshot: dict[str, float] | None = None
+
+    # -- chunk execution (overridden by the lane runtime) -------------------
+    def _run(self, chunk: eng.EventBatch, start: int):
+        return eng.run_engine_chunk(self.cfg, self.model, chunk, self.carry,
+                                    eng.wrap_event_index(start))
+
+    def _refresh_on(self) -> bool:
+        r = self.rt.refresh
+        return r is not None and r.every_chunks > 0
+
+    def _maybe_refresh(self) -> bool:
+        if not self._refresh_on() \
+           or self._chunk_i % self.rt.refresh.every_chunks != 0:
+            return False
+        self.model, self.carry, did = RF.refresh_model(
+            self.specs, self.cfg, self.model, self.carry, self.rt.refresh,
+            self.refresh_state)
+        return did
+
+    # -- ingestion ----------------------------------------------------------
+    def push(self, events: eng.EventBatch,
+             flush: bool = False) -> list[TM.ChunkStats]:
+        """Ingest events; run every full chunk now available.  With
+        ``flush`` the sub-chunk remainder runs too (end of stream)."""
+        pieces = self._buf.push(events)
+        if flush:
+            pieces += self._buf.drain()
+        return [self._run_piece(start, chunk) for start, chunk in pieces]
+
+    def flush(self) -> list[TM.ChunkStats]:
+        """Drain the buffered remainder as one final short chunk."""
+        return [self._run_piece(start, chunk)
+                for start, chunk in self._buf.drain()]
+
+    def _run_piece(self, start: int, chunk: eng.EventBatch) -> TM.ChunkStats:
+        # The previous chunk's snapshot doubles as this chunk's baseline
+        # (refresh never touches the counters), halving per-chunk
+        # device→host transfers.
+        before = self._snapshot or TM.counter_snapshot(self.carry)
+        t0 = time.perf_counter()
+        self.carry, outs = self._run(chunk, start)
+        jax.block_until_ready(self.carry.sim_time)
+        wall = time.perf_counter() - t0
+        self._chunk_i += 1
+        t1 = time.perf_counter()
+        refreshed = self._maybe_refresh()
+        refresh_wall = time.perf_counter() - t1
+        self._snapshot = TM.counter_snapshot(self.carry)
+        stats = TM.summarize_chunk(
+            self._chunk_i - 1, start, outs, before, self._snapshot, wall,
+            refreshed=refreshed, refresh_wall_s=refresh_wall)
+        self.telemetry.append(stats)
+        self.events_processed += stats.n_events
+        return stats
+
+
+class MultiTenantRuntime(StreamRuntime):
+    """L independent tenant lanes, vmapped per chunk (repro.runtime.lanes).
+
+    Events are pushed lane-stacked — every ``EventBatch`` leaf carries a
+    leading ``(L,)`` axis (``lanes.stack``) — and lanes advance in lockstep
+    over aligned chunk windows.  Models may be shared
+    (``lanes.broadcast_model``) or per-lane; refresh runs PER LANE from
+    each lane's own carry, so tenants adapt to their own stream's drift.
+    On a multi-device mesh, pass ``mesh`` to spread lanes × patterns via
+    ``repro.dist.sharding.run_chunk_lanes_sharded``.
+    """
+
+    def __init__(self, cfg: eng.EngineConfig, model: eng.EngineModel,
+                 num_lanes: int, rt: RuntimeConfig | None = None,
+                 specs: Sequence[pat.PatternSpec] | None = None,
+                 carry: eng.Carry | None = None, seed: int = 0, mesh=None):
+        self.num_lanes = num_lanes
+        self.mesh = mesh
+        if carry is None:
+            carry = LN.init_lane_carries(cfg, num_lanes, seed=seed)
+        super().__init__(cfg, model, rt=rt, specs=specs, carry=carry,
+                         seed=seed)
+        # chunk over the EVENT axis (axis 1 of lane-stacked leaves)
+        self._buf = chunker.ChunkBuffer(self.rt.chunk_size, axis=1)
+        self.refresh_state = [RF.RefreshState() for _ in range(num_lanes)]
+
+    def _run(self, chunk: eng.EventBatch, start: int):
+        start_i = eng.wrap_event_index(start)
+        if self.mesh is not None:
+            from repro.dist import sharding as SH
+            return SH.run_chunk_lanes_sharded(
+                self.cfg, self.model, chunk, self.carry, start_i,
+                mesh=self.mesh)
+        return LN.run_chunk_lanes(self.cfg, self.model, chunk, self.carry,
+                                  start_i)
+
+    def _maybe_refresh(self) -> bool:
+        if not self._refresh_on() \
+           or self._chunk_i % self.rt.refresh.every_chunks != 0:
+            return False
+        models, carries, did = [], [], False
+        for lane in range(self.num_lanes):
+            m, c, d = RF.refresh_model(
+                self.specs, self.cfg, LN.unstack_lane(self.model, lane),
+                LN.unstack_lane(self.carry, lane), self.rt.refresh,
+                self.refresh_state[lane])
+            models.append(m)
+            carries.append(c)
+            did |= d
+        if did:
+            self.model = LN.stack(models)
+            self.carry = LN.stack(carries)
+        return did
+
+    def merged_carry(self) -> eng.Carry:
+        """All lanes folded into one L·P-pattern carry (engine.merge_carries)
+        — the global view telemetry and reporting aggregate over."""
+        return eng.merge_carries(self.carry)

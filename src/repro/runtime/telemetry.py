@@ -1,0 +1,115 @@
+"""Per-chunk runtime telemetry (DESIGN.md §7).
+
+Between chunks the host owns control, so telemetry is plain numpy over the
+chunk's ``StepOut`` plus deltas of the carry's accumulator scalars — no
+device-side bookkeeping beyond what the engine already carries.  The log
+aggregates into the throughput headline ``benchmarks/bench_runtime.py``
+reports (events/sec, p50/p99 event latency, shed/overflow counters).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.cep.engine import Carry, StepOut
+
+# Carry accumulator scalars differenced per chunk.
+_COUNTERS = ("pms_shed", "shed_calls", "overflow", "ebl_dropped")
+
+
+def counter_snapshot(carry: Carry) -> dict[str, float]:
+    """Host copies of the carry's scalar counters (+ total completions)."""
+    snap = {k: float(np.asarray(getattr(carry, k)).sum()) for k in _COUNTERS}
+    snap["complex_count"] = float(np.asarray(carry.complex_count).sum())
+    return snap
+
+
+@dataclasses.dataclass
+class ChunkStats:
+    chunk_index: int
+    start: int                  # global index of the chunk's first event
+    n_events: int               # events processed (all lanes)
+    n_lanes: int
+    wall_s: float
+    events_per_s: float
+    l_e_p50: float
+    l_e_p99: float
+    l_e_max: float
+    n_pm_end: float             # active PMs after the chunk (all lanes)
+    shed_events: int            # events at which a shed triggered
+    dropped_events: int         # E-BL input drops
+    pms_shed: float             # counter deltas over the chunk
+    shed_calls: float
+    overflow: float
+    ebl_dropped: float
+    completions: float
+    refreshed: bool = False     # model refresh ran after this chunk
+    refresh_wall_s: float = 0.0  # host time spent in/gating the refresh
+
+    def to_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def summarize_chunk(chunk_index: int, start: int, outs: StepOut,
+                    before: dict[str, float], after: dict[str, float],
+                    wall_s: float, refreshed: bool = False,
+                    refresh_wall_s: float = 0.0) -> ChunkStats:
+    """Stats for one chunk; ``outs`` leaves are (n,) or lane-stacked (L, n)."""
+    l_e = np.asarray(outs.l_e, np.float64).ravel()
+    n_lanes = 1 if np.asarray(outs.l_e).ndim == 1 else outs.l_e.shape[0]
+    n_events = l_e.size
+    n_pm_end = float(np.asarray(outs.n_pm).reshape(n_lanes, -1)[:, -1].sum())
+    d = {k: after[k] - before[k] for k in before}
+    return ChunkStats(
+        chunk_index=chunk_index, start=start, n_events=n_events,
+        n_lanes=n_lanes, wall_s=wall_s,
+        events_per_s=n_events / max(wall_s, 1e-12),
+        l_e_p50=float(np.percentile(l_e, 50)) if n_events else 0.0,
+        l_e_p99=float(np.percentile(l_e, 99)) if n_events else 0.0,
+        l_e_max=float(l_e.max()) if n_events else 0.0,
+        n_pm_end=n_pm_end,
+        shed_events=int(np.asarray(outs.shed).sum()),
+        dropped_events=int(np.asarray(outs.dropped).sum()),
+        pms_shed=d["pms_shed"], shed_calls=d["shed_calls"],
+        overflow=d["overflow"], ebl_dropped=d["ebl_dropped"],
+        completions=d["complex_count"], refreshed=refreshed,
+        refresh_wall_s=refresh_wall_s,
+    )
+
+
+class TelemetryLog:
+    """Append-only chunk log with run-level aggregation."""
+
+    def __init__(self):
+        self.chunks: list[ChunkStats] = []
+
+    def append(self, stats: ChunkStats) -> None:
+        self.chunks.append(stats)
+
+    def rows(self) -> list[dict]:
+        return [c.to_row() for c in self.chunks]
+
+    def aggregate(self) -> dict:
+        if not self.chunks:
+            return {"n_chunks": 0, "n_events": 0, "events_per_s": 0.0}
+        n_events = sum(c.n_events for c in self.chunks)
+        # Aggregate throughput charges the host-side refresh time too —
+        # per-chunk events_per_s is processing-only.
+        wall = sum(c.wall_s + c.refresh_wall_s for c in self.chunks)
+        return {
+            "n_chunks": len(self.chunks),
+            "n_events": n_events,
+            "wall_s": wall,
+            "refresh_wall_s": sum(c.refresh_wall_s for c in self.chunks),
+            "events_per_s": n_events / max(wall, 1e-12),
+            "l_e_p50_max": max(c.l_e_p50 for c in self.chunks),
+            "l_e_p99_max": max(c.l_e_p99 for c in self.chunks),
+            "l_e_max": max(c.l_e_max for c in self.chunks),
+            "pms_shed": sum(c.pms_shed for c in self.chunks),
+            "shed_calls": sum(c.shed_calls for c in self.chunks),
+            "overflow": sum(c.overflow for c in self.chunks),
+            "ebl_dropped": sum(c.ebl_dropped for c in self.chunks),
+            "completions": sum(c.completions for c in self.chunks),
+            "refreshes": sum(1 for c in self.chunks if c.refreshed),
+        }

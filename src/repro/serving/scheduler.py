@@ -209,18 +209,25 @@ class PSpiceScheduler:
 
     # -- metrics ----------------------------------------------------------
     def metrics(self) -> dict:
-        done = [r for r in self.finished if r.done]
-        ev = [r for r in self.finished if r.evicted]
-        in_slo = [r for r in done if r.finish_time <= r.deadline]
+        # One linear pass: classify each request once (the SLO-miss test is
+        # a predicate, not a membership scan over the in-SLO list).
+        n_done = n_ev = n_slo = 0
+        w_total = w_miss = 0.0
+        for r in self.finished:
+            hit = r.done and r.finish_time <= r.deadline
+            n_done += r.done
+            n_ev += r.evicted
+            n_slo += hit
+            w_total += r.weight
+            if not hit:
+                w_miss += r.weight
         total = len(self.finished)
         return {
-            "completed": len(done),
-            "evicted": len(ev),
-            "in_slo": len(in_slo),
-            "goodput": len(in_slo) / max(total, 1),
-            "weighted_miss": sum(r.weight for r in self.finished
-                                 if r not in in_slo) / max(
-                sum(r.weight for r in self.finished), 1e-9),
+            "completed": n_done,
+            "evicted": n_ev,
+            "in_slo": n_slo,
+            "goodput": n_slo / max(total, 1),
+            "weighted_miss": w_miss / max(w_total, 1e-9),
             "evictions": self.evictions,
         }
 
