@@ -30,10 +30,13 @@ import numpy as np
 from repro.cep import patterns as pat
 from repro.core import overload as ovl
 from repro.core import shedder as shd
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
 SHED_NONE, SHED_PSPICE, SHED_PMBL, SHED_EBL = "none", "pspice", "pmbl", "ebl"
+
+BACKEND_XLA, BACKEND_PALLAS = "xla", "pallas"
 
 
 # ---------------------------------------------------------------------------
@@ -54,13 +57,32 @@ class EngineConfig:
     # Simulated-time cost model (seconds). The paper's operator load comes
     # from matching events against PMs (c_match · n_pm, scaled per pattern by
     # proc_cost) plus per-event window/bookkeeping cost c_base; shedding costs
-    # c_shed_base + c_shed_pm · n_pm (the sort); E-BL pays c_ebl per dropped
-    # event.
+    # c_shed_base + c_shed_pm · n_pm — the O(N) histogram-threshold plan
+    # (utility lookup + a constant number of bucket passes per PM; the old
+    # sort plan was O(N log N), which the linear g model under-predicted at
+    # large stores).  E-BL pays c_ebl per dropped event.
     c_base: float = 2e-6
     c_match: float = 1e-7
     c_shed_base: float = 5e-6
-    c_shed_pm: float = 5e-9
+    c_shed_pm: float = 2e-9   # per-PM shed cost, recalibrated to the O(N) plan
     c_ebl: float = 5e-7
+    # Hot-path dispatch (DESIGN.md §8).  backend: "xla" runs the jnp
+    # reference ops; "pallas" routes advance / utility lookup / shed
+    # through repro.kernels.ops (compiled on TPU, interpret elsewhere) —
+    # bitwise-equivalent (tests/test_backend.py).  spawn_alloc / shed_plan
+    # keep the legacy O(N log N) paths selectable as oracles and as the
+    # baseline benchmarks/bench_engine.py measures against.
+    backend: str = BACKEND_XLA          # "xla" | "pallas"
+    spawn_alloc: str = "cumsum"         # "cumsum" (O(N)) | "argsort" (legacy)
+    shed_plan: str = "threshold"        # "threshold" (O(N)) | "sort" (legacy)
+    # Static pattern census (DESIGN.md §8): when every pattern shares one
+    # kind / spawn mode, the step skips the other family's per-event ops
+    # (the O(A·N) idset machinery for SEQ-only sets, the O(K·N)
+    # window-spawn exists-check for AT_OPEN-only sets) — bitwise-identical
+    # to "mixed", which always computes both and selects.
+    # ``runner.default_config`` fills these in from the compiled patterns.
+    kinds: str = "mixed"                # "seq" | "any" | "mixed"
+    spawn_modes: str = "mixed"          # "at_open" | "in_windows" | "mixed"
     gather_stats: bool = False
     shedder: str = SHED_NONE
     # E-BL drop-fraction controller: model-based feedforward (drop enough to
@@ -158,6 +180,19 @@ def make_model(cp: pat.CompiledPatterns, cfg: EngineConfig,
                g_model: ovl.LatencyModel | None = None,
                ebl_raw_mean: float = 0.5) -> EngineModel:
     P, M = cp.num_patterns, cp.max_states
+    # The census fields gate which per-event op families the step compiles
+    # — an inconsistent census would silently produce wrong matches.
+    kind, sm = np.asarray(cp.kind), np.asarray(cp.spawn_mode)
+    if (cfg.kinds == "seq" and (kind != pat.KIND_SEQ).any()) or \
+       (cfg.kinds == "any" and (kind != pat.KIND_ANY).any()):
+        raise ValueError(f"cfg.kinds={cfg.kinds!r} but patterns have "
+                         f"kinds {sorted(set(kind.tolist()))}")
+    if (cfg.spawn_modes == "at_open" and
+            (sm != pat.SPAWN_AT_OPEN).any()) or \
+       (cfg.spawn_modes == "in_windows" and
+            (sm != pat.SPAWN_IN_WINDOWS).any()):
+        raise ValueError(f"cfg.spawn_modes={cfg.spawn_modes!r} but patterns "
+                         f"have spawn modes {sorted(set(sm.tolist()))}")
     num_bins = 1 if ut_tables is None else ut_tables.shape[1]
     if ut_tables is None:
         ut_tables = jnp.ones((P, num_bins, M), jnp.float32)
@@ -230,31 +265,50 @@ def _advance(cfg: EngineConfig, model: EngineModel, pms: PMStore,
     bind_ok = jnp.where(model.uses_binding[:, None], pms.bind == b, True)
     c_eff = jnp.where(bind_ok, c, 0)
 
-    # SEQ: dense table lookup trans[p, state, c_eff].
-    seq_next = jnp.take_along_axis(
-        jnp.take_along_axis(model.trans, pms.state[:, :, None],
-                            axis=2 - 1),  # gather over states → (P,N,C+1)
-        c_eff[..., None].astype(jnp.int32), axis=2)[..., 0]
-
-    # ANY: distinct-count advance.
-    in_set = (pms.idset == ev_id).any(axis=-1)            # (P, N)
+    # SEQ: dense table lookup trans[p, state, c_eff] — ONE flat (P·N,)
+    # gather (the old double take_along_axis materialized a (P, N, C+1)
+    # intermediate every event).  Class 0 self-loops, so a failed binding
+    # (c_eff = 0) keeps the state — which is also exactly what the Pallas
+    # kernel's in-kernel binding check does.
     final = model.final_state[:, None]
-    any_match = (c_eff == 1) & ~in_set & (pms.state < final)
-    any_next = pms.state + any_match.astype(jnp.int32)
+    if cfg.kinds != "any":
+        if cfg.backend == BACKEND_PALLAS:
+            seq_next = kops.advance_seq_multi(
+                pms.state, pms.bind, pms.active, model.trans, ev_class,
+                ev_bind, model.final_state, model.uses_binding,
+                interpret=kops.default_interpret())
+        else:
+            M, C1 = model.trans.shape[1], model.trans.shape[2]
+            pidx = jnp.arange(P, dtype=jnp.int32)[:, None]
+            flat_idx = (pidx * M + pms.state) * C1 + c_eff.astype(jnp.int32)
+            seq_next = jnp.take(model.trans.reshape(-1), flat_idx)
 
-    is_seq = (model.kind == pat.KIND_SEQ)[:, None]
-    new_state = jnp.where(pms.active,
-                          jnp.where(is_seq, seq_next, any_next), pms.state)
+    # ANY: distinct-count advance + idset insert at the next free position:
+    # a PM at state j holds (j-1) ids if the spawn event didn't count (Q3)
+    # or j ids if it did (Q4) — insertion slot is state-1 (+1 when
+    # spawn_counts).  SEQ-only pattern sets skip all of it (the inserts
+    # are dead: do_insert requires ~is_seq).
+    if cfg.kinds != "seq":
+        in_set = (pms.idset == ev_id).any(axis=-1)            # (P, N)
+        any_match = (c_eff == 1) & ~in_set & (pms.state < final)
+        any_next = pms.state + any_match.astype(jnp.int32)
+        A = cfg.max_any_ids
+        sc = model.spawn_counts.astype(jnp.int32)[:, None]
+        slot = jnp.clip(pms.state - 1 + sc, 0, A - 1)
+        is_seq = (model.kind == pat.KIND_SEQ)[:, None]
+        do_insert = (~is_seq) & pms.active & any_match
+        onehot = jax.nn.one_hot(slot, A, dtype=bool) & do_insert[..., None]
+        idset = jnp.where(onehot, ev_id, pms.idset)
 
-    # idset insert at the next free position for ANY matches: a PM at state j
-    # holds (j-1) ids if the spawn event didn't count (Q3) or j ids if it did
-    # (Q4) — so the insertion slot is state-1 (+1 when spawn_counts).
-    A = cfg.max_any_ids
-    sc = model.spawn_counts.astype(jnp.int32)[:, None]
-    slot = jnp.clip(pms.state - 1 + sc, 0, A - 1)
-    do_insert = (~is_seq) & pms.active & any_match
-    onehot = jax.nn.one_hot(slot, A, dtype=bool) & do_insert[..., None]
-    idset = jnp.where(onehot, ev_id, pms.idset)
+    if cfg.kinds == "seq":
+        new_state = jnp.where(pms.active, seq_next, pms.state)
+        idset = pms.idset
+    elif cfg.kinds == "any":
+        new_state = jnp.where(pms.active, any_next, pms.state)
+    else:
+        new_state = jnp.where(pms.active,
+                              jnp.where(is_seq, seq_next, any_next),
+                              pms.state)
 
     completed = pms.active & (new_state == final) & (pms.state != final)
     active = pms.active & ~completed
@@ -276,25 +330,56 @@ def _spawn(cfg: EngineConfig, model: EngineModel, pms: PMStore, ring: Array,
     at_open = model.spawn_mode == pat.SPAWN_AT_OPEN
 
     # Candidate spawns: K slots per pattern. Candidate 0 doubles as the
-    # AT_OPEN candidate.
-    ring_valid = ring >= 0
-    in_window = (i - ring) < model.window_size[:, None]
-    exists = ((pms.active[:, None, :]) &
-              (pms.open_idx[:, None, :] == ring[:, :, None]) &
-              (pms.bind[:, None, :] == ev_bind[:, None, None])).any(-1)
-    win_spawn = (ring_valid & in_window & ~exists &
-                 (ev_class == 1)[:, None] & (~at_open)[:, None])
+    # AT_OPEN candidate.  The O(K·N) ring exists-check only runs when a
+    # SPAWN_IN_WINDOWS pattern can exist (census: cfg.spawn_modes).
+    if cfg.spawn_modes != "at_open":
+        ring_valid = ring >= 0
+        in_window = (i - ring) < model.window_size[:, None]
+        exists = ((pms.active[:, None, :]) &
+                  (pms.open_idx[:, None, :] == ring[:, :, None]) &
+                  (pms.bind[:, None, :] == ev_bind[:, None, None])).any(-1)
+        win_spawn = (ring_valid & in_window & ~exists &
+                     (ev_class == 1)[:, None] & (~at_open)[:, None])
     open_spawn = (at_open & ev_open)[:, None] & (jnp.arange(K) == 0)
-    cand = win_spawn | open_spawn                            # (P, K)
-    cand_open_idx = jnp.where(at_open[:, None], i, ring)     # (P, K)
+    if cfg.spawn_modes == "at_open":
+        cand = open_spawn                                    # (P, K)
+        cand_open_idx = jnp.broadcast_to(i, (P, K)).astype(jnp.int32)
+    elif cfg.spawn_modes == "in_windows":
+        cand = win_spawn
+        cand_open_idx = ring
+    else:
+        cand = win_spawn | open_spawn
+        cand_open_idx = jnp.where(at_open[:, None], i, ring)  # (P, K)
 
-    # Allocate free slots: order inactive-first (stable), take first K.
-    free_order = jnp.argsort(pms.active, axis=1, stable=True)  # (P, N)
+    # Allocate free slots: candidate r takes the (r+1)-th lowest-index
+    # inactive slot (stable inactive-first order).
     n_free = (~pms.active).sum(axis=1)                          # (P,)
     rank = jnp.cumsum(cand, axis=1) - 1                        # (P, K)
     can_alloc = cand & (rank < n_free[:, None])
     overflow = (cand & ~can_alloc).sum()
-    slots = jnp.take_along_axis(free_order, jnp.clip(rank, 0, N - 1), axis=1)
+    if cfg.spawn_alloc == "argsort":
+        # Legacy allocator (the oracle the O(N) scheme is property-tested
+        # against, and bench_engine.py's baseline): full per-event sort.
+        free_order = jnp.argsort(pms.active, axis=1, stable=True)  # (P, N)
+        slots = jnp.take_along_axis(free_order, jnp.clip(rank, 0, N - 1),
+                                    axis=1)
+    else:
+        # O(N) free-list compaction: every inactive slot scatters its own
+        # index at its rank among the free slots (masked-cumsum rank), so
+        # `free_slots[p, r]` is precisely what the stable argsort put
+        # there for r < n_free — bitwise-identical slot choices
+        # (tests/test_backend.py).  Ranks ≥ n_free stay at the sentinel N;
+        # they are only read where ~can_alloc masks the update to a
+        # dropped OOB scatter, exactly like the legacy path's junk slots.
+        free_rank = jnp.cumsum(~pms.active, axis=1) - 1        # (P, N)
+        rowbase = jnp.arange(P, dtype=jnp.int32)[:, None] * N
+        tgt = jnp.where(~pms.active, rowbase + free_rank, cfg.flat_pms)
+        cols = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (P, N))
+        free_slots = jnp.full((cfg.flat_pms,), N, jnp.int32).at[
+            tgt.reshape(-1)].set(cols.reshape(-1),
+                                 mode="drop").reshape(P, N)
+        slots = jnp.take_along_axis(free_slots, jnp.clip(rank, 0, N - 1),
+                                    axis=1)
 
     rows = jnp.arange(P)[:, None] * jnp.ones((1, K), jnp.int32)
     flatidx = (rows * N + slots).reshape(-1)
@@ -335,14 +420,29 @@ def _shed_now(cfg: EngineConfig, model: EngineModel, c: Carry, i: Array,
     flat_active = pms.active.reshape(-1)
     key, sub = jax.random.split(c.key)
     if cfg.shedder == SHED_PSPICE:
-        pattern_id = jnp.repeat(jnp.arange(P, dtype=jnp.int32), N)
-        new_flat = shd.shed(
-            "pspice", key=sub, active=flat_active, rho=rho,
-            stacked_tables=model.ut_tables, bin_sizes=model.ut_bins,
-            pattern_id=pattern_id, state=pms.state.reshape(-1),
-            r_w=r_w.reshape(-1))
-    else:  # PM-BL
-        new_flat = shd.shed("pmbl", key=sub, active=flat_active, rho=rho)
+        if cfg.backend == BACKEND_PALLAS:
+            # Kernel path: fused per-pattern utility lookup + the same
+            # histogram-threshold plan with the Pallas bucket counter.
+            interp = kops.default_interpret()
+            u = kops.pm_utilities_multi(
+                pms.state, r_w, pms.active, model.ut_tables, model.ut_bins,
+                interpret=interp).reshape(-1)
+            if cfg.shed_plan == "sort":
+                new_flat = shd.drop_lowest_utility(
+                    flat_active, jnp.where(flat_active, u, jnp.inf), rho)
+            else:
+                new_flat = kops.shed_lowest_threshold(flat_active, u, rho,
+                                                      interpret=interp)
+        else:
+            pattern_id = jnp.repeat(jnp.arange(P, dtype=jnp.int32), N)
+            new_flat = shd.shed(
+                "pspice", key=sub, active=flat_active, rho=rho,
+                stacked_tables=model.ut_tables, bin_sizes=model.ut_bins,
+                pattern_id=pattern_id, state=pms.state.reshape(-1),
+                r_w=r_w.reshape(-1), plan=cfg.shed_plan)
+    else:  # PM-BL — O(N) select over uniform scores on either backend
+        new_flat = shd.shed("pmbl", key=sub, active=flat_active, rho=rho,
+                            plan=cfg.shed_plan)
     active = new_flat.reshape(P, N)
     dropped = (n_before - active.sum()).astype(jnp.float32)
     shed_cost = cfg.c_shed_base + cfg.c_shed_pm * n_before.astype(jnp.float32)
@@ -367,12 +467,16 @@ def _pre_shed(cfg: EngineConfig, model: EngineModel, carry: Carry,
     pms = pms._replace(active=pms.active & ~expired)
 
     # -- ring update (window-open bookkeeping for SPAWN_IN_WINDOWS) ---------
-    in_win_mode = model.spawn_mode == pat.SPAWN_IN_WINDOWS
-    opens = ev_open & in_win_mode
-    ring = jnp.where(
-        opens[:, None] &
-        (jnp.arange(cfg.ring_size) == c.ring_ptr[:, None]), i, c.ring)
-    ring_ptr = jnp.where(opens, (c.ring_ptr + 1) % cfg.ring_size, c.ring_ptr)
+    if cfg.spawn_modes == "at_open":
+        ring, ring_ptr = c.ring, c.ring_ptr   # no in-window spawner exists
+    else:
+        in_win_mode = model.spawn_mode == pat.SPAWN_IN_WINDOWS
+        opens = ev_open & in_win_mode
+        ring = jnp.where(
+            opens[:, None] &
+            (jnp.arange(cfg.ring_size) == c.ring_ptr[:, None]), i, c.ring)
+        ring_ptr = jnp.where(opens, (c.ring_ptr + 1) % cfg.ring_size,
+                             c.ring_ptr)
 
     # -- 2. queueing latency & overload check (Alg. 1) ----------------------
     sim_time = jnp.maximum(c.sim_time, arrival)
@@ -589,7 +693,7 @@ def wrap_event_index(start) -> Array:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",),
-                   donate_argnames=("carry",))
+                   donate_argnames=("carry", "events"))
 def run_engine_chunk(cfg: EngineConfig, model: EngineModel,
                      events: EventBatch, carry: Carry,
                      start: Array) -> tuple[Carry, StepOut]:
@@ -597,9 +701,12 @@ def run_engine_chunk(cfg: EngineConfig, model: EngineModel,
 
     Identical semantics to ``run_engine`` restricted to events
     ``[start, start + chunk)``; the carry is DONATED so the steady-state
-    loop reuses its buffers (constant memory over an unbounded stream).
-    ``start`` is a traced scalar, so every same-length chunk hits one
-    compiled executable — zero retraces while streaming.
+    loop reuses its buffers (constant memory over an unbounded stream),
+    and so are the chunk's event buffers — each chunk slice is consumed
+    exactly once, and donating it lets XLA write the per-event StepOut
+    columns into the arriving chunk's storage instead of fresh
+    allocations.  ``start`` is a traced scalar, so every same-length
+    chunk hits one compiled executable — zero retraces while streaming.
     """
     return _scan_events(cfg, model, events, carry, start)
 

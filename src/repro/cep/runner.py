@@ -41,6 +41,7 @@ class BuiltModel:
 
 
 def default_config(cp: pat.CompiledPatterns, **kw) -> eng.EngineConfig:
+    kind, sm = np.asarray(cp.kind), np.asarray(cp.spawn_mode)
     base = dict(
         num_patterns=cp.num_patterns,
         max_states=cp.max_states,
@@ -48,6 +49,13 @@ def default_config(cp: pat.CompiledPatterns, **kw) -> eng.EngineConfig:
         max_pms=2048,
         max_any_ids=max(8, int(cp.final_state.max()) + 1),
         ring_size=8,
+        # Static pattern census: lets the engine skip the per-event ops of
+        # pattern families that cannot occur (bitwise-identical to "mixed").
+        kinds=("seq" if (kind == pat.KIND_SEQ).all()
+               else "any" if (kind == pat.KIND_ANY).all() else "mixed"),
+        spawn_modes=("at_open" if (sm == pat.SPAWN_AT_OPEN).all()
+                     else "in_windows" if (sm == pat.SPAWN_IN_WINDOWS).all()
+                     else "mixed"),
     )
     base.update(kw)
     return eng.EngineConfig(**base)

@@ -14,7 +14,10 @@ COST = dict(
     c_base=3e-4,       # per-event window/bookkeeping cost
     c_match=6e-5,      # per-PM-per-event match cost (× pattern proc_cost)
     c_shed_base=1.5e-4,  # shed-call fixed cost
-    c_shed_pm=1.5e-6,  # shed-call per-PM cost (the "sort")
+    c_shed_pm=5e-7,    # shed-call per-PM cost — the O(N) histogram-
+                       # threshold plan (DESIGN.md §8): lookup + a constant
+                       # number of bucket passes per PM, ~1/3 the per-PM
+                       # cost the sort-based Alg. 2 was calibrated to
     c_ebl=6e-5,        # residual cost of an E-BL-dropped event
 )
 

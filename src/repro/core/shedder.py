@@ -13,6 +13,13 @@ Shedders:
   - random_drop:  PM-BL — Bernoulli-uniform ρ-subset drop.
   - (E-BL, the event-level baseline, lives in the engine's input path —
      see repro/cep/engine.py — because it sheds events, not PMs.)
+
+Selection plans (DESIGN.md §3, §8):
+  - "threshold" (default): ``threshold_drop_mask`` — an O(N)
+    histogram-refinement select.  No sort anywhere on the hot path.
+  - "sort": the original argsort rank (kept as the oracle the threshold
+    plan is property-tested against, and as the legacy baseline
+    ``benchmarks/bench_engine.py`` measures the win over).
 """
 from __future__ import annotations
 
@@ -22,6 +29,8 @@ import jax.numpy as jnp
 from repro.core import utility as util
 
 Array = jax.Array
+
+_BIG = jnp.float32(3.4e38)   # finite inactive-slot sentinel (f32-safe inf)
 
 
 def pspice_utilities(stacked_tables: Array, bin_sizes: Array,
@@ -35,11 +44,13 @@ def pspice_utilities(stacked_tables: Array, bin_sizes: Array,
 
 
 def drop_lowest_utility(active: Array, utilities: Array, rho: Array) -> Array:
-    """Algorithm 2: drop the rho active PMs with the lowest utilities.
+    """Algorithm 2 ORACLE: drop the rho active PMs with the lowest utilities.
 
     Vectorized equivalent of sort + drop-first-ρ: rank PMs by utility
     ascending; clear slots whose rank < ρ.  rho is a traced scalar so this is
-    jit/scan-safe (no dynamic shapes).
+    jit/scan-safe (no dynamic shapes).  O(N log N) — the per-event hot path
+    uses ``threshold_drop_mask`` instead; this stays as the property-test
+    oracle and the legacy plan (``plan="sort"``).
     """
     order = jnp.argsort(utilities)                # ascending; inf (inactive) last
     ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
@@ -47,27 +58,112 @@ def drop_lowest_utility(active: Array, utilities: Array, rho: Array) -> Array:
     return active & ~drop
 
 
+def bucket_edges(lo: Array, hi: Array, nbins: int) -> Array:
+    """The (nbins+1,) bucket edges every histogram implementation shares.
+
+    The SAME expression is used by the jnp histogram below and by the
+    Pallas kernel (``kernels.shed_select.utility_histogram_pallas``), so
+    boundary values land in the same bucket bit-for-bit on every backend.
+    The top edge is +inf: the last bucket is right-closed (it owns the max).
+    """
+    edges = lo + (hi - lo) * jnp.arange(nbins + 1, dtype=jnp.float32) / nbins
+    return edges.at[-1].set(jnp.inf)
+
+
+def _histogram_jnp(u: Array, mask: Array, lo: Array, hi: Array,
+                   nbins: int) -> Array:
+    """O(N) masked bucket counts via one scatter-add.  Bucket membership is
+    edge-comparison based (searchsorted against ``bucket_edges``) so it
+    agrees exactly with the Pallas histogram kernel."""
+    edges = bucket_edges(lo, hi, nbins)
+    b = jnp.clip(jnp.searchsorted(edges, jnp.where(mask, u, lo),
+                                  side="right") - 1, 0, nbins - 1)
+    return jnp.zeros((nbins,), jnp.int32).at[b].add(mask.astype(jnp.int32))
+
+
+def threshold_drop_mask(active: Array, utilities: Array, rho: Array, *,
+                        nbins: int = 128, levels: int = 3,
+                        hist_fn=None) -> Array:
+    """Algorithm 2 without the sort: O(N·levels) histogram-refinement select.
+
+    Each level buckets the surviving candidate set over [lo, hi), finds the
+    boundary bucket that contains the ρ-th lowest utility (cumsum over the
+    tiny histogram + searchsorted), drops everything strictly below it, and
+    recurses INTO the bucket.  After ``levels`` rounds the candidate span is
+    (hi-lo)/nbins**levels wide; the remaining budget breaks ties by slot
+    index — exactly the stable-argsort oracle's tie order once the bucket
+    has collapsed to a single f32 value (all-ties inputs are bitwise equal
+    to the oracle).  Guarantees, for any input (tests/test_shedder.py):
+      - exactly min(ρ, n_active) PMs dropped,
+      - inactive slots never revived,
+      - max(dropped utility) ≤ min(kept utility) + (hi-lo)/nbins**levels.
+
+    ``hist_fn(u, lo, hi) -> (nbins,) int32`` may be supplied to compute the
+    bucket counts (the Pallas-kernel path passes
+    ``utility_histogram_pallas``); excluded entries are passed as NaN, which
+    no bucket counts.  The default is one jnp scatter-add; both agree
+    bitwise because they share ``bucket_edges``.
+    """
+    u = utilities.astype(jnp.float32)
+    n_active = active.sum().astype(jnp.int32)
+    need = jnp.minimum(rho.astype(jnp.int32), n_active)
+    lo = jnp.min(jnp.where(active, u, _BIG))
+    hi0 = jnp.max(jnp.where(active, u, -_BIG))
+    hi = jnp.where(hi0 > lo, hi0, lo + 1.0)
+    mask = active
+    drop = jnp.zeros_like(active)
+    for _ in range(levels):
+        if hist_fn is None:
+            hist = _histogram_jnp(u, mask, lo, hi, nbins)
+        else:
+            hist = hist_fn(jnp.where(mask, u, jnp.nan), lo, hi)
+        cum = jnp.cumsum(hist)
+        # First bucket whose cumulative count reaches the remaining budget.
+        kb = jnp.clip(jnp.searchsorted(cum, need, side="left"), 0, nbins - 1)
+        # Boundary values MUST compare against the very same f32 edge the
+        # histogram bucketed them with — take it from the shared edges.
+        edges = bucket_edges(lo, hi, nbins)
+        edge = edges[kb]
+        upper = edges[kb + 1]                 # +inf for the last bucket
+        below = mask & (u < edge)
+        drop = drop | below
+        need = jnp.maximum(need - below.sum().astype(jnp.int32), 0)
+        mask = mask & ~below & (u < upper)
+        lo = edge
+        hi_next = jnp.where(kb == nbins - 1, hi, upper)
+        hi = jnp.where(hi_next > lo, hi_next, lo + 1.0)
+    # Exact-ρ remainder inside the final bucket: first `need` by slot index.
+    idx_rank = jnp.cumsum(mask) - 1
+    drop = drop | (mask & (idx_rank < need))
+    return active & ~drop
+
+
 def random_drop(key: Array, active: Array, rho: Array) -> Array:
-    """PM-BL: drop a uniformly random ρ-subset of active PMs (Bernoulli
-    sampler realized as random ranking — exactly ρ dropped, matching the
-    budget the overload detector computed)."""
+    """PM-BL: drop a uniformly random ρ-subset of active PMs — exactly ρ
+    dropped, matching the budget the overload detector computed.  Realized
+    as the O(N) threshold select over iid uniform scores (the ρ lowest of
+    iid uniforms are a uniform ρ-subset); no sort."""
     scores = jax.random.uniform(key, active.shape)
-    scores = jnp.where(active, scores, jnp.inf)
-    order = jnp.argsort(scores)
-    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
-    return active & ~(ranks < rho)
+    return threshold_drop_mask(active, scores, rho)
 
 
 def shed(kind: str, *, key: Array, active: Array, rho: Array,
          stacked_tables: Array | None = None, bin_sizes: Array | None = None,
          pattern_id: Array | None = None, state: Array | None = None,
-         r_w: Array | None = None) -> Array:
-    """Dispatch helper used by the engine. kind in {'pspice', 'pmbl'}."""
+         r_w: Array | None = None, plan: str = "threshold") -> Array:
+    """Dispatch helper used by the engine. kind in {'pspice', 'pmbl'};
+    plan in {'threshold', 'sort'} (see module docstring)."""
     if kind == "pspice":
         u = pspice_utilities(stacked_tables, bin_sizes, active, pattern_id,
                              state, r_w)
-        return drop_lowest_utility(active, u, rho)
+        if plan == "sort":
+            return drop_lowest_utility(active, u, rho)
+        return threshold_drop_mask(active, u, rho)
     if kind == "pmbl":
+        if plan == "sort":
+            scores = jax.random.uniform(key, active.shape)
+            scores = jnp.where(active, scores, jnp.inf)
+            return drop_lowest_utility(active, scores, rho)
         return random_drop(key, active, rho)
     raise ValueError(f"unknown shedder kind: {kind}")
 

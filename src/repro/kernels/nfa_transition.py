@@ -52,15 +52,25 @@ def nfa_advance_pallas(state: jax.Array, bind: jax.Array, active: jax.Array,
 
     state/bind: (N,) int32; active: (N,) bool; trans_col: (M,) int32 —
     trans[:, class] for the event's class.  Returns (new_state (N,),
-    completed (N,) bool)."""
+    completed (N,) bool).
+
+    N need not be a tile multiple: inputs pad with INACTIVE slots (state 0,
+    bind -1, active 0 — the kernel passes them through untouched and never
+    flags completion) and the outputs slice back, matching the treatment
+    the shed kernels give non-tile-multiple stores."""
     N = state.shape[0]
     m = trans_col.shape[0]
     tile = min(tile, N)
-    assert N % tile == 0
+    pad = (-N) % tile
+    if pad:
+        state = jnp.concatenate([state, jnp.zeros((pad,), state.dtype)])
+        bind = jnp.concatenate([bind, jnp.full((pad,), -1, bind.dtype)])
+        active = jnp.concatenate([active,
+                                  jnp.zeros((pad,), active.dtype)])
     scal = jnp.array([ev_bind, final, use_binding], jnp.int32)
     new_state, completed = pl.pallas_call(
         functools.partial(_nfa_kernel, m=m),
-        grid=(N // tile,),
+        grid=((N + pad) // tile,),
         in_specs=[
             pl.BlockSpec((tile,), lambda i: (i,)),
             pl.BlockSpec((tile,), lambda i: (i,)),
@@ -70,8 +80,10 @@ def nfa_advance_pallas(state: jax.Array, bind: jax.Array, active: jax.Array,
         ],
         out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
                    pl.BlockSpec((tile,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32),
-                   jax.ShapeDtypeStruct((N,), jnp.int32)],
+        out_shape=[jax.ShapeDtypeStruct((N + pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((N + pad,), jnp.int32)],
         interpret=interpret,
     )(state, bind, active.astype(jnp.int32), trans_col, scal)
+    if pad:
+        new_state, completed = new_state[:N], completed[:N]
     return new_state, completed.astype(bool)

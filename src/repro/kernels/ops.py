@@ -1,4 +1,15 @@
-"""Jit'd public wrappers around the Pallas kernels."""
+"""Jit'd public wrappers around the Pallas kernels + the engine's
+backend-dispatch surface (``EngineConfig.backend`` — DESIGN.md §8).
+
+The engine never touches a kernel directly: it calls
+``advance_seq_multi`` / ``pm_utilities_multi`` / ``shed_lowest_threshold``
+below, which run the Pallas kernels (compiled on TPU, ``interpret=True``
+everywhere else via :func:`default_interpret`) and are bitwise-equivalent
+to the jnp reference path — the one-hot matmuls touch exactly one nonzero
+per row, and the histogram-threshold driver shares ``bucket_edges`` with
+the jnp histogram, so xla-vs-pallas engine runs compare equal
+(tests/test_backend.py).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,10 +17,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import shedder as shd
 from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
 from repro.kernels.nfa_transition import nfa_advance_pallas  # noqa: F401
 from repro.kernels.shed_select import (utility_histogram_pallas,
+                                       utility_lookup_dyn_pallas,
                                        utility_lookup_pallas)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels compile only on TPU; anywhere else run interpreted."""
+    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("bin_size", "nbins",
@@ -17,37 +35,67 @@ from repro.kernels.shed_select import (utility_histogram_pallas,
 def shed_lowest_pallas(active: jax.Array, state: jax.Array, r_w: jax.Array,
                        table: jax.Array, rho: jax.Array, *, bin_size: int,
                        nbins: int = 64, interpret: bool = True) -> jax.Array:
-    """Algorithm 2 via kernels: utility lookup → histogram → threshold →
-    drop mask (exact ρ via rank-adjust inside the boundary bucket).
+    """Algorithm 2 via kernels: utility lookup → histogram-refinement
+    threshold plan (``core.shedder.threshold_drop_mask`` with the Pallas
+    histogram as its bucket counter).  O(N) end to end — the former
+    exact-ρ argsort inside the boundary bucket is gone; remaining ties
+    break by slot index after the refinement levels collapse the bucket.
 
     Returns the new active mask with the ρ lowest-utility PMs cleared.
     """
     u = utility_lookup_pallas(state, r_w, active, table, bin_size=bin_size,
                               interpret=interpret)
-    # Threshold plan over active utilities only.
-    act = active
-    big = jnp.float32(3.4e38)
-    u_act = jnp.where(act, u, big)
-    lo = jnp.min(jnp.where(act, u, big))
-    hi = jnp.max(jnp.where(act, u, -big))
-    hi = jnp.where(hi > lo, hi, lo + 1.0)
-    hist = utility_histogram_pallas(u_act, lo, hi, nbins=nbins,
-                                    interpret=interpret)
-    cum = jnp.cumsum(hist)
-    # First bucket where cumulative count reaches rho.
-    kbucket = jnp.searchsorted(cum, rho, side="left")
-    kbucket = jnp.clip(kbucket, 0, nbins - 1)
-    edge = lo + (hi - lo) * kbucket.astype(jnp.float32) / nbins
-    below = act & (u_act < edge)
-    n_below = below.sum()
-    # Exact-ρ remainder inside the boundary bucket: rank by utility order.
-    # (The last bucket is right-closed — its top edge is the active max.)
-    upper = jnp.where(kbucket == nbins - 1, jnp.inf,
-                      lo + (hi - lo) * (kbucket + 1).astype(jnp.float32)
-                      / nbins)
-    in_bucket = act & ~below & (u_act < upper)
-    need = jnp.maximum(rho - n_below, 0)
-    order = jnp.argsort(jnp.where(in_bucket, u_act, big))
-    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
-    bucket_drop = in_bucket & (ranks < need)
-    return act & ~(below | bucket_drop)
+    hist = functools.partial(utility_histogram_pallas, nbins=nbins,
+                             interpret=interpret)
+    return shd.threshold_drop_mask(active, u, rho, nbins=nbins, hist_fn=hist)
+
+
+def advance_seq_multi(state: jax.Array, bind: jax.Array, active: jax.Array,
+                      trans: jax.Array, ev_class: jax.Array,
+                      ev_bind: jax.Array, final_state: jax.Array,
+                      uses_binding: jax.Array, *,
+                      interpret: bool = True) -> jax.Array:
+    """SEQ advance for the whole (P, N) PM store via ``nfa_advance_pallas``,
+    one kernel launch per pattern (P is small and static).
+
+    ``trans_col = trans[p, :, class_p]`` is gathered outside the kernel
+    (tiny: (M,) per pattern); binding check + advance + the one-hot MXU
+    matmul run inside.  Returns new_state (P, N) int32 — completions are
+    detected by the engine from (old, new) states, same as the jnp path.
+    """
+    P = state.shape[0]
+    out = []
+    for p in range(P):
+        tcol = jnp.take(trans[p], ev_class[p], axis=1)      # (M,)
+        ns, _ = nfa_advance_pallas(state[p], bind[p], active[p], tcol,
+                                   ev_bind[p], final_state[p],
+                                   uses_binding[p].astype(jnp.int32),
+                                   interpret=interpret)
+        out.append(ns)
+    return jnp.stack(out)
+
+
+def pm_utilities_multi(state: jax.Array, r_w: jax.Array, active: jax.Array,
+                       tables: jax.Array, bin_sizes: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """Fused utility lookup for the whole (P, N) store: one
+    ``utility_lookup_dyn_pallas`` launch per pattern against its own
+    (B, M) table and traced bin size.  Inactive slots get the kernel's
+    finite +inf sentinel; the threshold driver masks them anyway.
+    """
+    P = state.shape[0]
+    return jnp.stack([
+        utility_lookup_dyn_pallas(state[p], r_w[p], active[p], tables[p],
+                                  bin_sizes[p], interpret=interpret)
+        for p in range(P)])
+
+
+def shed_lowest_threshold(active: jax.Array, utilities: jax.Array,
+                          rho: jax.Array, *, nbins: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """Histogram-threshold drop mask over flat (N,) utilities with the
+    Pallas histogram kernel as the bucket counter (engine pallas path)."""
+    hist = functools.partial(utility_histogram_pallas, nbins=nbins,
+                             interpret=interpret)
+    return shd.threshold_drop_mask(active, utilities, rho, nbins=nbins,
+                                   hist_fn=hist)

@@ -22,13 +22,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.shedder import bucket_edges
 
-def _lookup_kernel(state_ref, rw_ref, active_ref, table_ref, out_ref, *,
-                   num_bins: int, m: int, bin_size: int, inf_val: float):
+
+def _lookup_kernel(state_ref, rw_ref, active_ref, table_ref, bs_ref,
+                   out_ref, *, num_bins: int, m: int, inf_val: float):
     state = state_ref[...]
     rw = rw_ref[...].astype(jnp.float32)
     active = active_ref[...] > 0
     table = table_ref[...]                    # (num_bins, M)
+    bin_size = bs_ref[0]                      # traced f32 scalar
 
     pos = jnp.clip(rw / bin_size - 1.0, 0.0, num_bins - 1.0)
     j0 = jnp.floor(pos).astype(jnp.int32)
@@ -52,15 +55,13 @@ def _lookup_kernel(state_ref, rw_ref, active_ref, table_ref, out_ref, *,
     out_ref[...] = jnp.where(active, u, inf_val)
 
 
-@functools.partial(jax.jit, static_argnames=("bin_size", "tile",
-                                             "interpret"))
-def utility_lookup_pallas(state, r_w, active, table, *, bin_size: int,
-                          tile: int = 256, interpret: bool = True,
-                          inf_val: float = 3.4e38):
-    """Fused O(1)-per-PM utility lookup. table: (num_bins, M) f32.
-
-    N need not be a tile multiple: inputs are padded with inactive slots
-    (which lower to inf_val in the kernel) and the output is sliced back.
+def utility_lookup_dyn_pallas(state, r_w, active, table, bin_size, *,
+                              tile: int = 256, interpret: bool = True,
+                              inf_val: float = 3.4e38):
+    """``utility_lookup_pallas`` with a TRACED bin size (f32 scalar array)
+    — the engine's multi-pattern dispatch passes ``model.ut_bins[p]``, a
+    device value, so the bin size rides into the kernel as a (1,) scalar
+    input instead of a static Python int.
     """
     N = state.shape[0]
     num_bins, m = table.shape
@@ -71,21 +72,38 @@ def utility_lookup_pallas(state, r_w, active, table, *, bin_size: int,
         r_w = jnp.concatenate([r_w, jnp.ones((pad,), r_w.dtype)])
         active = jnp.concatenate(
             [active, jnp.zeros((pad,), active.dtype)])
+    bs = jnp.asarray(bin_size, jnp.float32).reshape(1)
     out = pl.pallas_call(
         functools.partial(_lookup_kernel, num_bins=num_bins, m=m,
-                          bin_size=bin_size, inf_val=inf_val),
+                          inf_val=inf_val),
         grid=((N + pad) // tile,),
         in_specs=[
             pl.BlockSpec((tile,), lambda i: (i,)),
             pl.BlockSpec((tile,), lambda i: (i,)),
             pl.BlockSpec((tile,), lambda i: (i,)),
             pl.BlockSpec((num_bins, m), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((N + pad,), jnp.float32),
         interpret=interpret,
-    )(state, r_w, active.astype(jnp.int32), table)
+    )(state, r_w, active.astype(jnp.int32), table, bs)
     return out[:N] if pad else out
+
+
+@functools.partial(jax.jit, static_argnames=("bin_size", "tile",
+                                             "interpret"))
+def utility_lookup_pallas(state, r_w, active, table, *, bin_size: int,
+                          tile: int = 256, interpret: bool = True,
+                          inf_val: float = 3.4e38):
+    """Fused O(1)-per-PM utility lookup. table: (num_bins, M) f32.
+
+    N need not be a tile multiple: inputs are padded with inactive slots
+    (which lower to inf_val in the kernel) and the output is sliced back.
+    """
+    return utility_lookup_dyn_pallas(state, r_w, active, table,
+                                     jnp.float32(bin_size), tile=tile,
+                                     interpret=interpret, inf_val=inf_val)
 
 
 def _hist_kernel(u_ref, edges_ref, hist_ref, *, nbins: int):
@@ -117,8 +135,9 @@ def utility_histogram_pallas(u, lo, hi, *, nbins: int = 64, tile: int = 256,
     pad = (-N) % tile
     if pad:
         u = jnp.concatenate([u, jnp.full((pad,), jnp.nan, u.dtype)])
-    edges = lo + (hi - lo) * jnp.arange(nbins + 1, dtype=jnp.float32) / nbins
-    edges = edges.at[-1].set(jnp.inf)
+    # Shared edge expression (core.shedder.bucket_edges): boundary values
+    # bucket identically on the jnp and Pallas histogram paths.
+    edges = bucket_edges(lo, hi, nbins)
     return pl.pallas_call(
         functools.partial(_hist_kernel, nbins=nbins),
         grid=((N + pad) // tile,),

@@ -8,7 +8,8 @@ tenant lanes, and per-chunk telemetry.  See DESIGN.md §7.
 from repro.runtime.chunker import (ChunkBuffer, concat_events, iter_chunks,
                                    num_events, slice_events)
 from repro.runtime.lanes import (broadcast_model, init_lane_carries,
-                                 num_lanes, run_chunk_lanes, stack,
+                                 num_lanes, run_chunk_lanes,
+                                 run_chunk_lanes_donated, stack,
                                  unstack_lane)
 from repro.runtime.refresh import (RefreshConfig, RefreshState,
                                    prepare_model, refit_latency_model,
@@ -16,14 +17,17 @@ from repro.runtime.refresh import (RefreshConfig, RefreshState,
 from repro.runtime.service import (MultiTenantRuntime, RuntimeConfig,
                                    StreamRuntime)
 from repro.runtime.telemetry import (ChunkStats, TelemetryLog,
-                                     counter_snapshot, summarize_chunk)
+                                     counter_snapshot, device_chunk_stats,
+                                     summarize_chunk)
 
 __all__ = [
     "ChunkBuffer", "concat_events", "iter_chunks", "num_events",
     "slice_events", "broadcast_model", "init_lane_carries", "num_lanes",
-    "run_chunk_lanes", "stack", "unstack_lane", "RefreshConfig",
+    "run_chunk_lanes", "run_chunk_lanes_donated", "stack", "unstack_lane",
+    "RefreshConfig",
     "RefreshState", "prepare_model", "refit_latency_model", "refresh_model",
     "table_width",
     "MultiTenantRuntime", "RuntimeConfig", "StreamRuntime", "ChunkStats",
-    "TelemetryLog", "counter_snapshot", "summarize_chunk",
+    "TelemetryLog", "counter_snapshot", "device_chunk_stats",
+    "summarize_chunk",
 ]

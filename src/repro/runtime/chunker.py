@@ -29,7 +29,12 @@ def num_events(events: EventBatch, axis: int = 0) -> int:
 
 def _take(x, start: int, stop: int, axis: int):
     idx = [slice(None)] * axis + [slice(start, stop)]
-    return x[tuple(idx)]
+    y = x[tuple(idx)]
+    # A full-range slice returns the SAME array object in jax.  Sliced
+    # pieces feed DONATING jits (run_engine_chunk, the group runners), so
+    # an aliasing slice would hand the caller's own buffers to donation
+    # and delete them under their feet — force a copy in that case.
+    return y.copy() if y is x else y
 
 
 def slice_events(events: EventBatch, start: int, stop: int,
@@ -77,16 +82,34 @@ class ChunkBuffer:
             else num_events(self._pending, self.axis)
 
     def push(self, events: EventBatch) -> list[tuple[int, EventBatch]]:
+        start, region, n_chunks = self.push_region(events)
+        if n_chunks == 0:
+            return []
+        return list(iter_chunks(region, self.chunk_size, start=start,
+                                axis=self.axis))
+
+    def push_region(self, events: EventBatch) \
+            -> tuple[int, EventBatch | None, int]:
+        """Like ``push`` but returns the full-chunk region UNSLICED:
+        ``(global_start, region, n_full_chunks)`` with ``region`` holding
+        ``n_full_chunks · chunk_size`` events (None when no full chunk is
+        available).  The runtime reshapes the region into a (B, chunk, …)
+        batch and scans whole chunk GROUPS per device dispatch
+        (DESIGN.md §8) instead of paying per-chunk slicing + dispatch.
+        The tail stays buffered exactly as with ``push``.
+
+        Ownership contract: the returned region (and everything ``drain``
+        later returns) NEVER aliases the pushed batch — ``_take`` copies
+        full-range slices — so it is safe to feed donating jits."""
         buf = concat_events(self._pending, events, self.axis)
         n = num_events(buf, self.axis)
         n_full = (n // self.chunk_size) * self.chunk_size
-        chunks = list(iter_chunks(slice_events(buf, 0, n_full, self.axis),
-                                  self.chunk_size, start=self._next_start,
-                                  axis=self.axis))
+        start = self._next_start
+        region = slice_events(buf, 0, n_full, self.axis) if n_full else None
         self._pending = slice_events(buf, n_full, n, self.axis) \
             if n > n_full else None
         self._next_start += n_full
-        return chunks
+        return start, region, n_full // self.chunk_size
 
     def drain(self) -> list[tuple[int, EventBatch]]:
         if self._pending is None:

@@ -66,10 +66,27 @@ def run_chunk_lanes(cfg: eng.EngineConfig, model: eng.EngineModel,
     ``start`` is shared: lanes advance in lockstep over aligned chunk
     windows (each lane still has its own arrival clock inside its
     EventBatch).  The lane-stacked carry is donated, like the single-lane
-    chunk step.  Uses the engine's ``_step_lanes`` body — a scalar
-    any-lane shed gate instead of vmapping the per-lane ``lax.cond``
-    (which would run the expensive shed path every event) — and stays
-    bitwise-identical per lane to running each lane through
-    ``run_engine`` on its own (tests/test_runtime.py).
+    chunk step; events are NOT (callers legitimately re-push the same
+    lane-stacked batch — the runtime's steady-state loop uses
+    ``run_chunk_lanes_donated`` on its freshly sliced chunks instead).
+    Uses the engine's ``_step_lanes`` body — a scalar any-lane shed gate
+    instead of vmapping the per-lane ``lax.cond`` (which would run the
+    expensive shed path every event) — and stays bitwise-identical per
+    lane to running each lane through ``run_engine`` on its own
+    (tests/test_runtime.py).
     """
+    return eng._scan_events_lanes(cfg, model, events, carry, start)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("carry", "events"))
+def run_chunk_lanes_donated(cfg: eng.EngineConfig, model: eng.EngineModel,
+                            events: eng.EventBatch, carry: eng.Carry,
+                            start: jax.Array) -> tuple[eng.Carry,
+                                                       eng.StepOut]:
+    """``run_chunk_lanes`` that ALSO donates the chunk's event buffers —
+    the scan-entry lane→time transpose and the StepOut columns reuse the
+    arriving chunk's storage instead of fresh allocations.  Only for
+    callers that consume each chunk exactly once (the MultiTenantRuntime
+    steady-state loop feeds it freshly sliced ChunkBuffer pieces)."""
     return eng._scan_events_lanes(cfg, model, events, carry, start)

@@ -18,10 +18,13 @@ the stream runs.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.cep import engine as eng
 from repro.cep import patterns as pat
@@ -32,6 +35,42 @@ from repro.runtime import chunker, lanes as LN, refresh as RF, telemetry as TM
 class RuntimeConfig:
     chunk_size: int = 1024
     refresh: RF.RefreshConfig | None = None
+    # Macro-batching (DESIGN.md §8): up to this many consecutive full
+    # chunks run in ONE device dispatch (a lax.scan over chunks with the
+    # per-chunk telemetry vectors computed in-scan), amortizing per-chunk
+    # slicing/dispatch/transfer costs.  Groups never cross a refresh
+    # boundary, so the host keeps its control cadence.  1 disables.
+    group_chunks: int = 16
+
+
+def _make_group_runner(scan_fn, chunk_axis: int):
+    """A donating jit that runs B consecutive chunks in ONE dispatch:
+    a lax.scan over the leading chunk axis whose body IS the engine's
+    event scan, so results are bitwise-identical to B sequential chunk
+    calls; per-chunk telemetry vectors are computed in-scan.  The two
+    instances differ only in the engine scan and where the chunk size
+    sits in the event leaves ((B, chunk, ...) vs (B, L, chunk, ...))."""
+
+    @functools.partial(jax.jit, static_argnames=("cfg",),
+                       donate_argnames=("carry", "events"))
+    def run(cfg: eng.EngineConfig, model: eng.EngineModel,
+            events: eng.EventBatch, carry: eng.Carry, start: jax.Array):
+        lead = jax.tree.leaves(events)[0]
+        b, cs = lead.shape[0], lead.shape[chunk_axis]
+        starts = start + cs * jnp.arange(b, dtype=jnp.int32)
+
+        def body(c, x):
+            ev_b, s = x
+            c, outs = scan_fn(cfg, model, ev_b, c, s)
+            return c, TM.device_chunk_stats(outs, c)
+
+        return jax.lax.scan(body, carry, (events, starts))
+
+    return run
+
+
+_run_group_single = _make_group_runner(eng._scan_events, chunk_axis=1)
+_run_group_lanes = _make_group_runner(eng._scan_events_lanes, chunk_axis=2)
 
 
 class StreamRuntime:
@@ -94,34 +133,110 @@ class StreamRuntime:
     def push(self, events: eng.EventBatch,
              flush: bool = False) -> list[TM.ChunkStats]:
         """Ingest events; run every full chunk now available.  With
-        ``flush`` the sub-chunk remainder runs too (end of stream)."""
-        pieces = self._buf.push(events)
+        ``flush`` the sub-chunk remainder runs too (end of stream).
+
+        Consecutive full chunks run as macro-batched GROUPS — one device
+        dispatch per up-to-``group_chunks`` chunks, never crossing a
+        refresh boundary — with identical results and per-chunk stats to
+        chunk-at-a-time execution (tests/test_runtime.py)."""
+        start, region, n_chunks = self._buf.push_region(events)
+        stats = self._run_region(start, region, n_chunks)
         if flush:
-            pieces += self._buf.drain()
-        return [self._run_piece(start, chunk) for start, chunk in pieces]
+            stats += self.flush()
+        return stats
 
     def flush(self) -> list[TM.ChunkStats]:
         """Drain the buffered remainder as one final short chunk."""
         return [self._run_piece(start, chunk)
                 for start, chunk in self._buf.drain()]
 
-    def _run_piece(self, start: int, chunk: eng.EventBatch) -> TM.ChunkStats:
-        # The previous chunk's snapshot doubles as this chunk's baseline
-        # (refresh never touches the counters), halving per-chunk
-        # device→host transfers.
+    def _group_limit(self) -> int:
+        return max(1, self.rt.group_chunks)
+
+    def _chunks_to_boundary(self) -> int:
+        """Chunks until the next refresh decision — groups must not cross
+        it, or the host would lose its control cadence."""
+        if not self._refresh_on():
+            return 1 << 30
+        every = self.rt.refresh.every_chunks
+        return every - (self._chunk_i % every)
+
+    def _run_region(self, start: int, region: eng.EventBatch | None,
+                    n_chunks: int) -> list[TM.ChunkStats]:
+        stats: list[TM.ChunkStats] = []
+        cs, axis, j = self.rt.chunk_size, self._buf.axis, 0
+        while j < n_chunks:
+            g = min(n_chunks - j, self._group_limit(),
+                    self._chunks_to_boundary())
+            # push_region owns the region (never aliases the caller's
+            # batch), so the common whole-region group skips the slice.
+            piece = region if j == 0 and g == n_chunks else \
+                chunker.slice_events(region, j * cs, (j + g) * cs, axis)
+            if g == 1:
+                stats.append(self._run_piece(start + j * cs, piece))
+            else:
+                stats += self._run_group(start + j * cs, piece, g)
+            j += g
+        return stats
+
+    # -- grouped execution (one dispatch per chunk group) -------------------
+    def _run_grouped(self, piece: eng.EventBatch, start: int, g: int):
+        ev = jax.tree.map(
+            lambda x: x.reshape((g, -1) + x.shape[1:]), piece)
+        return _run_group_single(self.cfg, self.model, ev, self.carry,
+                                 eng.wrap_event_index(start))
+
+    def _run_group(self, start: int, piece: eng.EventBatch,
+                   g: int) -> list[TM.ChunkStats]:
         before = self._snapshot or TM.counter_snapshot(self.carry)
+        cs = self.rt.chunk_size
+        n_lanes = 1 if self._buf.axis == 0 \
+            else jax.tree.leaves(piece)[0].shape[0]
+        t0 = time.perf_counter()
+        self.carry, vecs = self._run_grouped(piece, start, g)
+        vecs = np.asarray(vecs)                # ONE transfer for g chunks
+        wall = time.perf_counter() - t0
+        out = []
+        for b in range(g):
+            self._chunk_i += 1
+            out.append(TM.summarize_chunk(
+                self._chunk_i - 1, start + b * cs, n_lanes * cs, n_lanes,
+                vecs[b], before, wall / g))
+            before = TM.counters_from_vec(vecs[b])
+        # g never crosses a refresh boundary, so at most the LAST chunk of
+        # the group lands on one.
+        t1 = time.perf_counter()
+        refreshed = self._maybe_refresh()
+        out[-1].refreshed = refreshed
+        out[-1].refresh_wall_s = time.perf_counter() - t1
+        self._snapshot = before
+        for s in out:
+            self.telemetry.append(s)
+            self.events_processed += s.n_events
+        return out
+
+    def _run_piece(self, start: int, chunk: eng.EventBatch) -> TM.ChunkStats:
+        # The previous chunk's stats vector doubles as this chunk's
+        # counter baseline (refresh never touches the counters), so the
+        # steady state costs exactly ONE device→host transfer per chunk:
+        # the ~12-float `device_chunk_stats` vector, whose host read is
+        # also the sync point the wall-clock measurement needs.
+        before = self._snapshot or TM.counter_snapshot(self.carry)
+        n = chunker.num_events(chunk, self._buf.axis)
+        n_lanes = 1 if self._buf.axis == 0 \
+            else jax.tree.leaves(chunk)[0].shape[0]
         t0 = time.perf_counter()
         self.carry, outs = self._run(chunk, start)
-        jax.block_until_ready(self.carry.sim_time)
+        vec = np.asarray(TM.device_chunk_stats(outs, self.carry))
         wall = time.perf_counter() - t0
         self._chunk_i += 1
         t1 = time.perf_counter()
         refreshed = self._maybe_refresh()
         refresh_wall = time.perf_counter() - t1
-        self._snapshot = TM.counter_snapshot(self.carry)
         stats = TM.summarize_chunk(
-            self._chunk_i - 1, start, outs, before, self._snapshot, wall,
-            refreshed=refreshed, refresh_wall_s=refresh_wall)
+            self._chunk_i - 1, start, n_lanes * n, n_lanes, vec, before,
+            wall, refreshed=refreshed, refresh_wall_s=refresh_wall)
+        self._snapshot = TM.counters_from_vec(vec)
         self.telemetry.append(stats)
         self.events_processed += stats.n_events
         return stats
@@ -160,8 +275,21 @@ class MultiTenantRuntime(StreamRuntime):
             return SH.run_chunk_lanes_sharded(
                 self.cfg, self.model, chunk, self.carry, start_i,
                 mesh=self.mesh)
-        return LN.run_chunk_lanes(self.cfg, self.model, chunk, self.carry,
-                                  start_i)
+        return LN.run_chunk_lanes_donated(self.cfg, self.model, chunk,
+                                          self.carry, start_i)
+
+    def _group_limit(self) -> int:
+        # The sharded path has no grouped runner — chunk-at-a-time.
+        return 1 if self.mesh is not None else max(1, self.rt.group_chunks)
+
+    def _run_grouped(self, piece: eng.EventBatch, start: int, g: int):
+        # (L, g·cs, ...) → (g, L, cs, ...): chunk axis leads the scan.
+        def rs(x):
+            x = x.reshape((x.shape[0], g, -1) + x.shape[2:])
+            return jnp.swapaxes(x, 0, 1)
+        ev = jax.tree.map(rs, piece)
+        return _run_group_lanes(self.cfg, self.model, ev, self.carry,
+                                eng.wrap_event_index(start))
 
     def _maybe_refresh(self) -> bool:
         if not self._refresh_on() \

@@ -1,15 +1,22 @@
-"""Per-chunk runtime telemetry (DESIGN.md §7).
+"""Per-chunk runtime telemetry (DESIGN.md §7, §8).
 
-Between chunks the host owns control, so telemetry is plain numpy over the
-chunk's ``StepOut`` plus deltas of the carry's accumulator scalars — no
-device-side bookkeeping beyond what the engine already carries.  The log
+Between chunks the host owns control — but the chunk-size overhead budget
+(<10% vs the monolithic scan, BENCH_engine.json) leaves no room for the
+old per-chunk pattern of four chunk-sized device→host copies plus numpy
+percentiles plus half a dozen scalar reads.  All per-chunk reductions now
+run ON DEVICE in one fused jit (``device_chunk_stats``) and cross to the
+host as a single ~12-float vector per chunk; that transfer doubles as the
+synchronization point the wall-clock measurement needs.  The log
 aggregates into the throughput headline ``benchmarks/bench_runtime.py``
 reports (events/sec, p50/p99 event latency, shed/overflow counters).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.cep.engine import Carry, StepOut
@@ -17,12 +24,50 @@ from repro.cep.engine import Carry, StepOut
 # Carry accumulator scalars differenced per chunk.
 _COUNTERS = ("pms_shed", "shed_calls", "overflow", "ebl_dropped")
 
+# The device_chunk_stats vector layout — the SINGLE place that names the
+# slots.  _chunk_stats_device stacks in this order; summarize_chunk and
+# counters_from_vec read by name through _VEC.
+_VEC_FIELDS = ("l_e_p50", "l_e_p99", "l_e_max", "n_pm_end", "shed_events",
+               "dropped_events") + _COUNTERS + ("complex_count",)
+_VEC = {name: i for i, name in enumerate(_VEC_FIELDS)}
+
 
 def counter_snapshot(carry: Carry) -> dict[str, float]:
-    """Host copies of the carry's scalar counters (+ total completions)."""
+    """Host copies of the carry's scalar counters (+ total completions).
+    Used once per stream for the first chunk's baseline; steady-state
+    chunks reuse the counter tail of the previous ``device_chunk_stats``
+    vector instead."""
     snap = {k: float(np.asarray(getattr(carry, k)).sum()) for k in _COUNTERS}
     snap["complex_count"] = float(np.asarray(carry.complex_count).sum())
     return snap
+
+
+@jax.jit
+def _chunk_stats_device(outs: StepOut, counters: tuple) -> jax.Array:
+    l_e = outs.l_e.reshape(-1)
+    qs = jnp.quantile(l_e, jnp.array([0.5, 0.99], l_e.dtype))
+    pieces = [qs[0], qs[1], l_e.max(),          # l_e_p50 / p99 / max
+              outs.n_pm[..., -1].sum(),         # n_pm_end
+              outs.shed.sum(), outs.dropped.sum()]
+    pieces += [c.sum() for c in counters]       # _COUNTERS + complex_count
+    assert len(pieces) == len(_VEC_FIELDS)
+    return jnp.stack([p.astype(jnp.float32) for p in pieces])
+
+
+def device_chunk_stats(outs: StepOut, carry: Carry) -> jax.Array:
+    """Every per-chunk reduction fused into ONE device computation: l_e
+    p50/p99/max, end-of-chunk PM count, shed/dropped event counts, and the
+    carry's cumulative counters.  Returns a (11,) f32 vector — the single
+    device→host transfer each chunk costs."""
+    counters = tuple(getattr(carry, k) for k in _COUNTERS)
+    counters += (carry.complex_count,)
+    return _chunk_stats_device(outs, counters)
+
+
+def counters_from_vec(vec: np.ndarray) -> dict[str, float]:
+    """The cumulative-counter tail of a ``device_chunk_stats`` vector, in
+    ``counter_snapshot``'s format (the next chunk's 'before')."""
+    return {k: float(vec[_VEC[k]]) for k in _COUNTERS + ("complex_count",)}
 
 
 @dataclasses.dataclass
@@ -51,26 +96,25 @@ class ChunkStats:
         return dataclasses.asdict(self)
 
 
-def summarize_chunk(chunk_index: int, start: int, outs: StepOut,
-                    before: dict[str, float], after: dict[str, float],
-                    wall_s: float, refreshed: bool = False,
+def summarize_chunk(chunk_index: int, start: int, n_events: int,
+                    n_lanes: int, vec: np.ndarray,
+                    before: dict[str, float], wall_s: float,
+                    refreshed: bool = False,
                     refresh_wall_s: float = 0.0) -> ChunkStats:
-    """Stats for one chunk; ``outs`` leaves are (n,) or lane-stacked (L, n)."""
-    l_e = np.asarray(outs.l_e, np.float64).ravel()
-    n_lanes = 1 if np.asarray(outs.l_e).ndim == 1 else outs.l_e.shape[0]
-    n_events = l_e.size
-    n_pm_end = float(np.asarray(outs.n_pm).reshape(n_lanes, -1)[:, -1].sum())
+    """Stats for one chunk from its ``device_chunk_stats`` vector (the
+    chunk's one device→host transfer) + the previous chunk's cumulative
+    counters."""
+    after = counters_from_vec(vec)
     d = {k: after[k] - before[k] for k in before}
+    v = lambda k: float(vec[_VEC[k]])  # noqa: E731
     return ChunkStats(
         chunk_index=chunk_index, start=start, n_events=n_events,
         n_lanes=n_lanes, wall_s=wall_s,
         events_per_s=n_events / max(wall_s, 1e-12),
-        l_e_p50=float(np.percentile(l_e, 50)) if n_events else 0.0,
-        l_e_p99=float(np.percentile(l_e, 99)) if n_events else 0.0,
-        l_e_max=float(l_e.max()) if n_events else 0.0,
-        n_pm_end=n_pm_end,
-        shed_events=int(np.asarray(outs.shed).sum()),
-        dropped_events=int(np.asarray(outs.dropped).sum()),
+        l_e_p50=v("l_e_p50"), l_e_p99=v("l_e_p99"), l_e_max=v("l_e_max"),
+        n_pm_end=v("n_pm_end"),
+        shed_events=int(v("shed_events")),
+        dropped_events=int(v("dropped_events")),
         pms_shed=d["pms_shed"], shed_calls=d["shed_calls"],
         overflow=d["overflow"], ebl_dropped=d["ebl_dropped"],
         completions=d["complex_count"], refreshed=refreshed,

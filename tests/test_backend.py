@@ -1,0 +1,177 @@
+"""Hot-path equivalence properties (DESIGN.md §8).
+
+Three families, all BITWISE:
+  1. the O(N) cumsum spawn allocator vs the legacy stable-argsort
+     allocator, over random overloaded streams (hypothesis / fallback);
+  2. backend="pallas" (repro.kernels dispatch, interpret on CPU) vs
+     backend="xla" for run_engine AND run_engine_chunk, across all four
+     shedders and both spawn modes;
+  3. the static pattern census (kinds / spawn_modes specialization) vs
+     the always-compute-both "mixed" configuration.
+"""
+import dataclasses
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # declared in requirements-dev.txt; deterministic
+    from _hyp_fallback import given, settings, st  # fallback sweeps
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.cep import runner
+from repro.data import streams
+from repro import runtime as RT
+
+COST = dict(c_base=3e-4, c_match=6e-5, c_shed_base=1.5e-4, c_shed_pm=1.5e-6,
+            c_ebl=6e-5)
+SHEDDERS = (eng.SHED_NONE, eng.SHED_PSPICE, eng.SHED_PMBL, eng.SHED_EBL)
+
+
+def _assert_tree_equal(a, b, what=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=what)
+
+
+def _spec(name):
+    if name == "q1":  # SEQ / SPAWN_AT_OPEN
+        return pat.make_q1(window_size=400, num_symbols=4)
+    return pat.make_q4(any_n=3, window_size=120, slide=40)  # ANY / IN_WINDOWS
+
+
+def _setup(name, max_pms=48, n=600, seed=0, rate_mult=1.0):
+    specs = [_spec(name)]
+    cp = pat.compile_patterns(specs)
+    # Tight bound + overload rate so the shed path actually executes.
+    cfg = runner.default_config(cp, max_pms=max_pms, latency_bound=0.005,
+                                gather_stats=True,
+                                shedder=eng.SHED_PSPICE, **COST)
+    model = eng.make_model(cp, cfg)
+    rate = rate_mult * 3.0 / (cfg.c_base + cfg.c_match * 0.3 * max_pms)
+    raw = streams.gen_stock(n, num_symbols=50, pattern_symbols=4,
+                            p_class=0.05, seed=100 + seed)
+    ev = streams.classify(specs, raw, rate=rate, seed=seed)
+    return cfg, model, ev
+
+
+class TestSpawnAllocatorEquivalence:
+    """The O(N) free-list compaction must pick EXACTLY the slots the
+    legacy stable argsort picked — whole-carry bitwise equality over
+    random streams, including streams that overflow the store and
+    streams that shed."""
+
+    @given(st.integers(0, 7), st.integers(1, 3))
+    @settings(max_examples=12, deadline=None)
+    def test_random_streams_bitwise_identical(self, seed, rate_x):
+        cfg, model, ev = _setup("q1", seed=seed, rate_mult=float(rate_x))
+        c_new, o_new = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        leg = dataclasses.replace(cfg, spawn_alloc="argsort")
+        c_old, o_old = eng.run_engine(leg, model, ev, eng.init_carry(leg))
+        _assert_tree_equal(c_new, c_old, f"carry seed={seed}")
+        _assert_tree_equal(o_new, o_old, f"outs seed={seed}")
+
+    @pytest.mark.parametrize("name", ["q1", "q4"])
+    @pytest.mark.parametrize("shedder", SHEDDERS)
+    def test_all_shedders_and_spawn_modes(self, name, shedder):
+        cfg, model, ev = _setup(name)
+        cfg = dataclasses.replace(cfg, shedder=shedder)
+        c_new, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        leg = dataclasses.replace(cfg, spawn_alloc="argsort")
+        c_old, _ = eng.run_engine(leg, model, ev, eng.init_carry(leg))
+        _assert_tree_equal(c_new, c_old, f"{name}/{shedder}")
+
+    def test_overflowing_store_bitwise_identical(self):
+        """Tiny store: candidates exceed free slots, exercising the
+        rank >= n_free sentinel path of both allocators."""
+        cfg, model, ev = _setup("q4", max_pms=4)
+        c_new, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        leg = dataclasses.replace(cfg, spawn_alloc="argsort")
+        c_old, _ = eng.run_engine(leg, model, ev, eng.init_carry(leg))
+        assert float(c_new.overflow) > 0, "fixture must actually overflow"
+        _assert_tree_equal(c_new, c_old, "overflow carry")
+
+
+class TestBackendEquivalence:
+    """EngineConfig(backend="pallas") routes advance / utility lookup /
+    shed through repro.kernels.ops; results must be bitwise-equal to the
+    jnp reference backend (one-hot matmuls touch exactly one nonzero,
+    and the histogram plans share bucket_edges)."""
+
+    @pytest.mark.parametrize("name", ["q1", "q4"])
+    @pytest.mark.parametrize("shedder", SHEDDERS)
+    def test_run_engine(self, name, shedder):
+        cfg, model, ev = _setup(name, max_pms=32, n=150)
+        cfg = dataclasses.replace(cfg, shedder=shedder)
+        cx, ox = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        cfg_p = dataclasses.replace(cfg, backend=eng.BACKEND_PALLAS)
+        cp_, op_ = eng.run_engine(cfg_p, model, ev, eng.init_carry(cfg_p))
+        _assert_tree_equal(cx, cp_, f"{name}/{shedder} carry")
+        _assert_tree_equal(ox, op_, f"{name}/{shedder} outs")
+
+    def test_run_engine_chunk(self):
+        """Chunked pallas execution replays the monolithic xla scan."""
+        cfg, model, ev = _setup("q1", max_pms=32, n=320, rate_mult=2.0)
+        cx, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(cx.pms_shed) > 0, "fixture must actually shed"
+        cfg_p = dataclasses.replace(cfg, backend=eng.BACKEND_PALLAS)
+        carry = eng.init_carry(cfg_p)
+        for start, piece in RT.iter_chunks(ev, 64):
+            carry, _ = eng.run_engine_chunk(cfg_p, model, piece, carry,
+                                            jnp.int32(start))
+        _assert_tree_equal(cx, carry, "chunked pallas vs monolithic xla")
+
+
+class TestCensusEquivalence:
+    """kinds / spawn_modes specialization skips dead per-event ops; the
+    skipped ops must be provably dead — bitwise equality vs "mixed"."""
+
+    @pytest.mark.parametrize("name", ["q1", "q4"])
+    @pytest.mark.parametrize("shedder", SHEDDERS)
+    def test_specialized_matches_mixed(self, name, shedder):
+        cfg, model, ev = _setup(name)
+        cfg = dataclasses.replace(cfg, shedder=shedder)
+        assert cfg.kinds != "mixed" and cfg.spawn_modes != "mixed"
+        mixed = dataclasses.replace(cfg, kinds="mixed", spawn_modes="mixed")
+        c1, o1 = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        c2, o2 = eng.run_engine(mixed, model, ev, eng.init_carry(mixed))
+        _assert_tree_equal(c1, c2, f"{name}/{shedder} census carry")
+        _assert_tree_equal(o1, o2, f"{name}/{shedder} census outs")
+
+    def test_default_config_census(self):
+        cp = pat.compile_patterns([_spec("q1"), _spec("q4")])
+        cfg = runner.default_config(cp)
+        assert cfg.kinds == "mixed" and cfg.spawn_modes == "mixed"
+        cp1 = pat.compile_patterns([_spec("q1")])
+        cfg1 = runner.default_config(cp1)
+        assert cfg1.kinds == "seq" and cfg1.spawn_modes == "at_open"
+
+
+class TestNoSortInHotPath:
+    """The compiled per-event step must contain no sort for the default
+    config — spawn allocation and both shed plans are sort-free."""
+
+    @pytest.mark.parametrize("shedder",
+                             [eng.SHED_PSPICE, eng.SHED_PMBL])
+    def test_compiled_hlo_has_no_sort(self, shedder):
+        cfg, model, ev = _setup("q1", n=64)
+        cfg = dataclasses.replace(cfg, shedder=shedder)
+        hlo = jax.jit(
+            eng.run_engine, static_argnames=("cfg",)
+        ).lower(cfg, model, ev, eng.init_carry(cfg)).compile().as_text()
+        assert "sort(" not in hlo, f"sort found in {shedder} hot path"
+
+    def test_legacy_plan_does_sort(self):
+        """Sanity: the detector actually detects — the legacy config's
+        HLO must contain the sort the default config eliminated."""
+        cfg, model, ev = _setup("q1", n=64)
+        cfg = dataclasses.replace(cfg, spawn_alloc="argsort",
+                                  shed_plan="sort")
+        hlo = jax.jit(
+            eng.run_engine, static_argnames=("cfg",)
+        ).lower(cfg, model, ev, eng.init_carry(cfg)).compile().as_text()
+        assert "sort(" in hlo

@@ -90,6 +90,27 @@ class TestNFAKernel:
         np.testing.assert_array_equal(np.asarray(ns), np.asarray(nsr))
         np.testing.assert_array_equal(np.asarray(comp), np.asarray(compr))
 
+    @pytest.mark.parametrize("N", [1, 77, 255, 300, 513])
+    @pytest.mark.parametrize("use_binding", [0, 1])
+    def test_non_tile_multiple_n(self, N, use_binding):
+        """Odd N pads with inactive slots and slices back — the former
+        `assert N % tile == 0` path (PM stores are any size)."""
+        rng = np.random.default_rng(N * 13 + use_binding)
+        M = 8
+        state = jnp.asarray(rng.integers(0, M, N), jnp.int32)
+        bind = jnp.asarray(rng.integers(0, 5, N), jnp.int32)
+        active = jnp.asarray(rng.random(N) < 0.7)
+        tcol = jnp.asarray(
+            np.minimum(np.arange(M) + rng.integers(0, 2, M), M - 1),
+            jnp.int32)
+        ns, comp = nfa_advance_pallas(state, bind, active, tcol, 2, M - 1,
+                                      use_binding, interpret=True)
+        assert ns.shape == (N,) and comp.shape == (N,)
+        nsr, compr = ref.nfa_advance_ref(state, bind, active, tcol, 2,
+                                         M - 1, use_binding)
+        np.testing.assert_array_equal(np.asarray(ns), np.asarray(nsr))
+        np.testing.assert_array_equal(np.asarray(comp), np.asarray(compr))
+
 
 class TestShedKernels:
     @pytest.mark.parametrize("N,bins,m", [(256, 8, 4), (512, 16, 8),
@@ -159,14 +180,18 @@ class TestShedKernelVsShedderOracle:
         assert n_active - int(new.sum()) == min(rho, n_active)
         # ...never revives inactive slots...
         assert not bool(jnp.any(new & ~active))
-        # ...and every dropped utility ≤ every kept utility (ties may
-        # break differently from the oracle's argsort, but the threshold
-        # must be respected).
+        # ...and every dropped utility ≤ every kept utility up to the
+        # threshold plan's guarantee: the final refinement bucket is
+        # span/nbins^levels wide (nbins=64, levels=3 here), and ties
+        # inside it may break differently from the oracle's argsort.
         dropped = np.asarray(active & ~new)
         kept = np.asarray(new)
         if dropped.any() and kept.any():
             un = np.asarray(u)
-            assert un[dropped].max() <= un[kept].min() + 1e-6
+            act = np.asarray(active)
+            span = un[act].max() - un[act].min()
+            tol = max(span / 64.0 ** 3, 1e-6) * 1.01
+            assert un[dropped].max() <= un[kept].min() + tol
 
     @pytest.mark.parametrize("N", [77, 300, 500, 513])
     @pytest.mark.parametrize("rho", [0, 5, 64, 1000])

@@ -201,6 +201,26 @@ class TestChunkBuffer:
         (start, piece), = buf.drain()
         assert start == 32 and piece.ev_class.shape == (2, 18, 1)
 
+    def test_outputs_never_alias_pushed_batch(self):
+        """Full-range jax slices alias their input; everything the buffer
+        hands out feeds DONATING jits, so it must own its buffers — a
+        chunk-multiple push or a drained sub-chunk tail returning the
+        caller's own arrays would let donation delete them."""
+        ev = self._ev(64)
+        _, region, n = RT.ChunkBuffer(64).push_region(ev)
+        assert n == 1
+        for a, b in zip(jax.tree.leaves(region), jax.tree.leaves(ev)):
+            assert a is not b
+        buf = RT.ChunkBuffer(64)
+        tail_in = self._ev(10)
+        assert buf.push_region(tail_in)[2] == 0
+        (_, tail), = buf.drain()
+        for a, b in zip(jax.tree.leaves(tail), jax.tree.leaves(tail_in)):
+            assert a is not b
+        (_, piece), = RT.ChunkBuffer(64).push(self._ev(64))
+        for a, b in zip(jax.tree.leaves(piece), jax.tree.leaves(ev)):
+            assert a is not b
+
 
 class TestRefresh:
     def test_refresh_updates_tables_and_latency_model(self, setup):

@@ -40,6 +40,70 @@ class TestDropLowestUtility:
         assert not bool(new[0]) and not bool(new[2])
 
 
+class TestThresholdDropMask:
+    """The O(N) histogram-refinement select vs the argsort oracle."""
+
+    @given(st.integers(0, 500), st.integers(0, 2000))
+    @settings(max_examples=40, deadline=None)
+    def test_matches_oracle_invariants(self, seed, rho):
+        rng = np.random.default_rng(seed)
+        N = int(rng.integers(3, 400))
+        active = np.asarray(rng.random(N) < rng.uniform(0.1, 1.0))
+        scale = float(10 ** rng.uniform(-2, 3))
+        if seed % 3 == 0:  # tie-heavy: a handful of distinct levels
+            levels = np.linspace(0, scale, int(rng.integers(1, 5)))
+            u = rng.choice(levels, N).astype(np.float32)
+        else:
+            u = (rng.random(N) * scale).astype(np.float32)
+        u_act = jnp.where(jnp.asarray(active), jnp.asarray(u), jnp.inf)
+        new = shedder.threshold_drop_mask(jnp.asarray(active), u_act,
+                                          jnp.int32(rho))
+        oracle = shedder.drop_lowest_utility(jnp.asarray(active), u_act,
+                                             jnp.int32(rho))
+        n_active = int(active.sum())
+        # Exactly the oracle's count...
+        assert int(new.sum()) == int(oracle.sum())
+        assert n_active - int(new.sum()) == min(rho, n_active)
+        # ...never revives inactive slots...
+        assert not bool(jnp.any(new & ~jnp.asarray(active)))
+        # ...and respects the threshold up to the final bucket width.
+        dropped = active & ~np.asarray(new)
+        kept = np.asarray(new)
+        if dropped.any() and kept.any():
+            span = u[active].max() - u[active].min()
+            tol = max(span / 128.0 ** 3, 1e-6)
+            assert u[dropped].max() <= u[kept].min() + tol * 1.01
+
+    def test_all_ties_bitwise_equals_oracle(self):
+        """Once every candidate holds one f32 value, the index tie-break
+        IS the stable argsort order — bitwise equality."""
+        active = jnp.ones(200, bool)
+        u = jnp.full((200,), 0.5, jnp.float32)
+        for rho in (0, 1, 50, 199, 200, 999):
+            np.testing.assert_array_equal(
+                np.asarray(shedder.threshold_drop_mask(active, u,
+                                                       jnp.int32(rho))),
+                np.asarray(shedder.drop_lowest_utility(active, u,
+                                                       jnp.int32(rho))))
+
+    def test_shed_dispatch_plans_agree_on_count(self):
+        rng = np.random.default_rng(5)
+        N = 256
+        active = jnp.asarray(rng.random(N) < 0.8)
+        tables = jnp.asarray(rng.random((2, 8, 4)), jnp.float32)
+        bins = jnp.array([32, 32], jnp.int32)
+        pid = jnp.asarray(rng.integers(0, 2, N), jnp.int32)
+        state = jnp.asarray(rng.integers(0, 4, N), jnp.int32)
+        r_w = jnp.asarray(rng.integers(1, 256, N), jnp.int32)
+        key = jax.random.PRNGKey(0)
+        kw = dict(key=key, active=active, rho=jnp.int32(37),
+                  stacked_tables=tables, bin_sizes=bins, pattern_id=pid,
+                  state=state, r_w=r_w)
+        a = shedder.shed("pspice", plan="threshold", **kw)
+        b = shedder.shed("pspice", plan="sort", **kw)
+        assert int(a.sum()) == int(b.sum())
+
+
 class TestRandomDrop:
     def test_exact_budget(self):
         key = jax.random.PRNGKey(0)
