@@ -1,0 +1,19 @@
+"""repro — pSPICE (partial-match shedding for CEP) reproduction, grown
+into a sharded jax/Pallas streaming system.
+
+Subpackages are imported on demand (``import repro.cep.engine`` etc.);
+this module only re-exports the evaluation API so quality measurement is
+one import away:
+
+    from repro import eval as ev
+    report = ev.compare_match_sets(found, ground_truth)
+"""
+import importlib
+
+__all__ = ["cep", "core", "data", "dist", "eval", "kernels", "runtime"]
+
+
+def __getattr__(name: str):
+    if name in __all__:
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -83,6 +83,14 @@ class EngineConfig:
     # ``runner.default_config`` fills these in from the compiled patterns.
     kinds: str = "mixed"                # "seq" | "any" | "mixed"
     spawn_modes: str = "mixed"          # "at_open" | "in_windows" | "mixed"
+    # Match emission (repro.eval, DESIGN.md §9): when on, every step also
+    # emits the identity of each completed match — (open_idx, bind) of the
+    # completing PM, -1 where no completion — so a run's MATCH SET (not
+    # just its completion counts) can be extracted and diffed against the
+    # NumPy oracle / a no-shed ground truth.  Off (the default) the fields
+    # are zero-width (P, 0) arrays: same pytree structure, no hot-path
+    # cost, no retrace of existing configs.
+    emit_matches: bool = False
     gather_stats: bool = False
     shedder: str = SHED_NONE
     # E-BL drop-fraction controller: model-based feedforward (drop enough to
@@ -168,6 +176,12 @@ class StepOut(NamedTuple):
     n_pm: Array      # total active PMs after the step
     shed: Array      # bool — shed triggered at this event
     dropped: Array   # bool — event dropped by E-BL
+    # Match identities (cfg.emit_matches; zero-width (P, 0) otherwise):
+    # slot j of pattern p completed at this event iff match_open[p, j] >= 0,
+    # in which case (match_open, match_bind)[p, j] are the completing PM's
+    # window-open event index and binding value.
+    match_open: Array   # (P, N | 0) int32 — open_idx of completed PM, -1
+    match_bind: Array   # (P, N | 0) int32 — bind of completed PM, -1
 
 
 # ---------------------------------------------------------------------------
@@ -545,6 +559,15 @@ def _post_shed(cfg: EngineConfig, model: EngineModel, c: Carry,
     pms2, s_old, s_new, completed = _advance(cfg, model, pms, live_class,
                                              ev_bind, ev_id)
     n_completed = completed.sum(axis=1).astype(jnp.float32)
+    if cfg.emit_matches:
+        # Identity of each completed match: advance never moves PM payloads,
+        # so the completing slot's open_idx / bind are still in place.
+        m_open = jnp.where(completed, pms.open_idx, -1)
+        m_bind = jnp.where(completed, pms.bind,
+                           jnp.full_like(pms.bind, -1))
+    else:
+        m_open = jnp.zeros((cfg.num_patterns, 0), jnp.int32)
+        m_bind = jnp.zeros((cfg.num_patterns, 0), jnp.int32)
 
     # -- 5. spawn -------------------------------------------------------------
     pms3, spawned, oflow = _spawn(cfg, model, pms2, c.ring, i, live_open,
@@ -589,7 +612,8 @@ def _post_shed(cfg: EngineConfig, model: EngineModel, c: Carry,
         lat_samples_n=lat_n, lat_samples_l=lat_l, lat_ptr=c.lat_ptr + 1,
     )
     out = StepOut(l_e=l_e, n_pm=pms3.active.sum().astype(jnp.float32),
-                  shed=did_shed, dropped=ev_dropped)
+                  shed=did_shed, dropped=ev_dropped,
+                  match_open=m_open, match_bind=m_bind)
     return c, out
 
 
@@ -751,6 +775,32 @@ def merge_carries(stacked: Carry, axis: int = 0) -> Carry:
 # Results summary
 # ---------------------------------------------------------------------------
 
+def match_sets(outs: StepOut, start: int = 0) -> list[set[tuple]]:
+    """Decode emitted matches into per-pattern sets of match identities.
+
+    A match is the tuple ``(open_idx, bind, end_idx)`` — the completing
+    PM's window-open event index, its binding value, and the global index
+    of the completing event.  One PM exists per such identity (spawn
+    dedupes on (open_idx, bind)), so the match multiset IS a set; this is
+    the equality ``repro.eval`` uses for differential and metamorphic
+    testing (DESIGN.md §9).  Requires ``cfg.emit_matches``; ``start`` is
+    the global index of the first event (chunked runs pass their chunk
+    start and union the per-chunk sets).
+    """
+    m_open = np.asarray(outs.match_open)         # (n, P, N)
+    m_bind = np.asarray(outs.match_bind)
+    if m_open.ndim != 3 or m_open.shape[-1] == 0:
+        raise ValueError("run had cfg.emit_matches off — no match identity "
+                         "was emitted (match fields are zero-width)")
+    n, P, _ = m_open.shape
+    out: list[set[tuple]] = [set() for _ in range(P)]
+    ev, p, slot = np.nonzero(m_open >= 0)
+    for e, q, s in zip(ev.tolist(), p.tolist(), slot.tolist()):
+        out[q].add((int(m_open[e, q, s]), int(m_bind[e, q, s]),
+                    start + e))
+    return out
+
+
 @dataclasses.dataclass
 class RunResult:
     complex_count: np.ndarray   # (P,)
@@ -762,6 +812,8 @@ class RunResult:
     l_e: np.ndarray             # (n,)
     n_pm: np.ndarray            # (n,)
     carry: Carry
+    # Per-pattern match-identity sets (cfg.emit_matches runs; else None).
+    matches: list | None = None
 
     @property
     def match_probability(self) -> np.ndarray:
@@ -777,6 +829,8 @@ class RunResult:
 
 
 def summarize(carry: Carry, outs: StepOut) -> RunResult:
+    emitted = np.asarray(outs.match_open).ndim == 3 and \
+        outs.match_open.shape[-1] > 0
     return RunResult(
         complex_count=np.asarray(carry.complex_count),
         pms_created=np.asarray(carry.pms_created),
@@ -787,4 +841,5 @@ def summarize(carry: Carry, outs: StepOut) -> RunResult:
         l_e=np.asarray(outs.l_e),
         n_pm=np.asarray(outs.n_pm),
         carry=carry,
+        matches=match_sets(outs) if emitted else None,
     )

@@ -67,8 +67,11 @@ def build_model(specs: Sequence[pat.PatternSpec], cfg: eng.EngineConfig,
                 seed: int = 0) -> BuiltModel:
     """Phase 1+2: warm-up run with stats on, then build everything."""
     cp = pat.compile_patterns(specs)
+    # No match emission during warm-up: nothing reads the identity
+    # columns here, and they would be (n_warm, P, N) of dead output.
     warm_cfg = dataclasses.replace(cfg, gather_stats=True,
-                                   shedder=eng.SHED_NONE)
+                                   shedder=eng.SHED_NONE,
+                                   emit_matches=False)
     model0 = eng.make_model(cp, warm_cfg)
     carry = eng.init_carry(warm_cfg, seed=seed)
     carry, outs = eng.run_engine(warm_cfg, model0, warm_events, carry)
@@ -140,17 +143,34 @@ def run_with_shedder(specs: Sequence[pat.PatternSpec],
 @dataclasses.dataclass
 class ExperimentResult:
     shedder: str
-    fn: float                 # weighted false-negative fraction
+    fn: float                 # weighted false-negative fraction (count-based)
     match_probability: float  # ground-truth match probability
     max_rate: float
     result: eng.RunResult
     ground_truth: eng.RunResult
     latency_bound: float = 1.0  # the configured LB the run was held to
+    # Match-SET quality metrics (repro.eval.quality, DESIGN.md §9) —
+    # populated when the runs emitted matches (``emit_matches``, the
+    # run_experiment default).  ``fn`` above compares completion COUNTS;
+    # ``fn_match`` compares identities, so a shedder that loses one match
+    # while a different one completes cannot cancel the loss out.
+    recall: float | None = None        # weighted |found ∩ gt| / |gt|
+    fn_match: float | None = None      # 1 - recall
+    per_pattern_fn: np.ndarray | None = None   # (P,)
+    n_gt_matches: int = 0
+    n_found_matches: int = 0
 
     @property
     def lb_violations(self) -> float:
         """Fraction of events whose latency exceeded the configured bound."""
         return float((self.result.l_e > self.latency_bound).mean())
+
+    @property
+    def lb_compliance(self) -> float:
+        """Fraction of events whose latency met the configured bound
+        (delegates to the one §IV-B metric definition in repro.eval)."""
+        from repro.eval import quality as Q
+        return Q.latency_compliance(self.result.l_e, self.latency_bound)
 
 
 def run_experiment(specs: Sequence[pat.PatternSpec], raw: streams.RawStream,
@@ -161,11 +181,17 @@ def run_experiment(specs: Sequence[pat.PatternSpec], raw: streams.RawStream,
                    bin_size: int = 64, max_pms: int = 2048,
                    use_remaining_time: bool = True,
                    seed: int = 0, pattern_parallel: bool = False,
+                   emit_matches: bool = True,
                    **cfg_kw) -> dict[str, ExperimentResult]:
-    """The full paper methodology on one stream; returns per-shedder results."""
+    """The full paper methodology on one stream; returns per-shedder results.
+
+    With ``emit_matches`` (the default) every run emits its match
+    identities and the summary carries match-SET quality metrics (recall
+    / fn_match vs the no-shed ground truth) next to the legacy
+    count-based ``fn``."""
     cp = pat.compile_patterns(specs)
     cfg = default_config(cp, latency_bound=latency_bound, max_pms=max_pms,
-                         **cfg_kw)
+                         emit_matches=emit_matches, **cfg_kw)
 
     n_warm = int(raw.n * warm_frac)
     raw_warm = dataclasses.replace(
@@ -190,7 +216,7 @@ def run_experiment(specs: Sequence[pat.PatternSpec], raw: streams.RawStream,
         res = run_with_shedder(specs, cfg, built, raw_run, rate=rate,
                                shedder=sh, seed=seed,
                                pattern_parallel=pattern_parallel)
-        out[sh] = ExperimentResult(
+        er = ExperimentResult(
             shedder=sh,
             fn=res.false_negatives(gt, weights),
             match_probability=float(
@@ -198,4 +224,15 @@ def run_experiment(specs: Sequence[pat.PatternSpec], raw: streams.RawStream,
             max_rate=built.max_rate,
             result=res, ground_truth=gt,
             latency_bound=latency_bound)
+        if res.matches is not None and gt.matches is not None:
+            # Imported here: repro.eval's public surface pulls in the
+            # sweep driver, which imports this module.
+            from repro.eval import quality as Q
+            rep = Q.compare_match_sets(res.matches, gt.matches, weights)
+            er.recall = rep.recall
+            er.fn_match = rep.fn_ratio
+            er.per_pattern_fn = rep.per_pattern_fn
+            er.n_gt_matches = rep.n_gt
+            er.n_found_matches = rep.n_found
+        out[sh] = er
     return out

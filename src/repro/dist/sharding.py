@@ -336,7 +336,11 @@ def pm_specs(mesh, cfg, axis: str = "data") -> dict:
         ev_class=P(None, pax), ev_bind=P(None, pax), ev_open=P(None, pax),
         ev_id=P(None), ev_rand=P(None), ebl_raw=P(None), arrival=P(None))
     out = eng.StepOut(l_e=P(None), n_pm=P(None), shed=P(None),
-                      dropped=P(None))
+                      dropped=P(None),
+                      # match identities are pattern-local (zero-width
+                      # unless cfg.emit_matches): shard with the pattern.
+                      match_open=P(None, pax, None),
+                      match_bind=P(None, pax, None))
     return {"carry": carry, "model": model, "events": events, "out": out,
             "pattern_axis": pax}
 
@@ -369,7 +373,9 @@ def _merge_pattern_shards(new_c, outs, axis: str):
         l_e=pmax(outs.l_e),
         n_pm=psum(outs.n_pm),
         shed=pmax(outs.shed.astype(jnp.int32)) > 0,
-        dropped=pmax(outs.dropped.astype(jnp.int32)) > 0)
+        dropped=pmax(outs.dropped.astype(jnp.int32)) > 0,
+        # pattern-local: the out_spec concatenates shards on the pattern axis
+        match_open=outs.match_open, match_bind=outs.match_bind)
     return new_c, outs
 
 

@@ -1,0 +1,162 @@
+"""The paper-figure quality sweep (§IV-B, Figs. 5–6 shape).
+
+Runs the full experiment grid
+
+    {stock, soccer, bus} × {pspice, PM-BL, E-BL} × overload levels
+
+over the seeded scenario registry (``repro.data.streams.SCENARIOS``) and
+reports, per cell, the match-set false-negative ratio against the
+no-shed ground truth of the identical stream, plus latency-bound
+compliance and drop fractions.  ``benchmarks/bench_quality.py`` is the
+CLI; the committed ``BENCH_quality.json`` is the full-grid snapshot and
+CI re-runs ``--quick`` per PR, failing when the paper's headline
+ordering — pSPICE FN ≤ PM-BL FN and ≤ E-BL FN on every dataset at the
+paper overload level — does not hold (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Sequence
+
+from repro.cep import engine as eng
+from repro.cep import runner
+from repro.configs import pspice_paper as pp
+from repro.data import streams
+from repro.eval import quality as Q
+
+# The paper's Fig. 6 x-axis is 120%..200% of max operator throughput; the
+# headline comparisons (Fig. 5) run at the default 120% overload.
+OVERLOAD_LEVELS: tuple[float, ...] = (1.2, 1.4, 1.6)
+HEADLINE_LEVEL: float = pp.RATE_MULTIPLIER
+
+DATASETS: tuple[str, ...] = ("stock", "soccer", "bus")
+SHEDDERS: tuple[str, ...] = (eng.SHED_PSPICE, eng.SHED_PMBL, eng.SHED_EBL)
+
+
+def _cell(er: runner.ExperimentResult) -> dict:
+    """One (dataset, level, shedder) cell of the grid."""
+    return {
+        "fn": er.fn_match,                     # match-set FN ratio
+        "recall": er.recall,
+        "fn_count": er.fn,                     # legacy count-based FN
+        "n_gt": er.n_gt_matches,
+        "n_found": er.n_found_matches,
+        "lb_compliance": er.lb_compliance,
+        "drop_fraction": Q.drop_fraction(er.result),
+        "pms_shed": er.result.pms_shed,
+        "shed_calls": er.result.shed_calls,
+        "ebl_dropped": er.result.ebl_dropped,
+        "overflow": er.result.overflow,
+        "max_rate": er.max_rate,
+    }
+
+
+def run_dataset(name: str, levels: Sequence[float] = OVERLOAD_LEVELS,
+                shedders: Sequence[str] = SHEDDERS,
+                quick: bool = False, seed: int | None = None) -> dict:
+    """The overload grid for one scenario: per level, one ground-truth
+    run + one run per shedder on the identical stream."""
+    sc = streams.get_scenario(name)
+    n = sc.n_quick if quick else sc.n_default
+    raw = sc.raw(n=n, seed=seed)
+    specs = sc.specs()
+    by_level: dict[str, dict] = {}
+    for level in levels:
+        res = runner.run_experiment(
+            specs, raw, shedders=tuple(shedders), rate_multiplier=level,
+            max_pms=sc.max_pms, bin_size=sc.bin_size,
+            latency_bound=sc.latency_bound,
+            seed=sc.seed if seed is None else seed, **pp.COST)
+        by_level[f"{level:g}"] = {sh: _cell(er) for sh, er in res.items()}
+    curves = {
+        sh: Q.degradation_curve(
+            [(float(lv), dict(cells[sh], fn_ratio=cells[sh]["fn"]))
+             for lv, cells in by_level.items()])
+        for sh in shedders
+    }
+    return {
+        "scenario": name,
+        "n_events": n,
+        "seed": sc.seed if seed is None else seed,
+        "patterns": [s.name for s in specs],
+        "num_patterns": len(specs),
+        "max_pms": sc.max_pms,
+        "latency_bound": sc.latency_bound,
+        "levels": by_level,
+        "curves": curves,
+    }
+
+
+def run_quality_sweep(datasets: Sequence[str] = DATASETS,
+                      levels: Sequence[float] = OVERLOAD_LEVELS,
+                      shedders: Sequence[str] = SHEDDERS,
+                      quick: bool = False,
+                      results_dir: str | pathlib.Path | None = None) -> dict:
+    """The full grid.  With ``results_dir``, each dataset's grid is also
+    written to ``quality_<dataset>.json`` there (the per-figure files);
+    the returned dict is the ``BENCH_quality.json`` payload."""
+    per_dataset = {}
+    for name in datasets:
+        grid = run_dataset(name, levels=levels, shedders=shedders,
+                           quick=quick)
+        per_dataset[name] = grid
+        if results_dir is not None:
+            p = pathlib.Path(results_dir)
+            p.mkdir(parents=True, exist_ok=True)
+            (p / f"quality_{name}.json").write_text(
+                json.dumps(grid, indent=2, sort_keys=True) + "\n")
+    headline_key = f"{HEADLINE_LEVEL:g}"
+    headline = {
+        name: {sh: grid["levels"][headline_key][sh]["fn"]
+               for sh in shedders}
+        for name, grid in per_dataset.items()
+        if headline_key in grid["levels"]
+    }
+    bench = {
+        "config": {
+            "datasets": list(datasets),
+            "levels": [float(l) for l in levels],
+            "shedders": list(shedders),
+            "headline_level": HEADLINE_LEVEL,
+            "quick": quick,
+        },
+        "headline": headline,
+        "datasets": per_dataset,
+    }
+    bench["violations"] = check_headline(bench)
+    bench["ordering_ok"] = not bench["violations"]
+    return bench
+
+
+def check_headline(bench: dict) -> list[str]:
+    """The paper's headline ordering, as a CI gate: pSPICE's FN ratio
+    must be ≤ every baseline's on every dataset at the headline overload
+    level.  Returns human-readable violations (empty == pass).  A
+    dataset (or the whole headline level) missing from the grid is a
+    violation, never a silent pass — a gate that checked nothing must
+    not report success."""
+    violations = []
+    headline = bench.get("headline", {})
+    expected = bench.get("config", {}).get("datasets", list(headline))
+    if not headline:
+        violations.append("headline table is empty (is the headline "
+                          "overload level in the swept levels?)")
+    for name in expected:
+        if name not in headline:
+            violations.append(f"{name}: missing from the headline table")
+    for name, cells in headline.items():
+        if eng.SHED_PSPICE not in cells:
+            violations.append(f"{name}: no pspice cell in headline")
+            continue
+        fn_p = cells[eng.SHED_PSPICE]
+        for sh, fn_b in cells.items():
+            if sh == eng.SHED_PSPICE:
+                continue
+            if fn_p is None or fn_b is None:
+                violations.append(f"{name}: missing FN metric "
+                                  f"(pspice={fn_p}, {sh}={fn_b})")
+            elif fn_p > fn_b + 1e-9:
+                violations.append(
+                    f"{name}: pspice FN {fn_p:.4f} > {sh} FN {fn_b:.4f}")
+    return violations

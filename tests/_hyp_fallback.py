@@ -13,7 +13,7 @@ When the fallback is active, every ``@given`` test becomes a pytest
 parametrization over a fixed, seeded sample of the declared strategies
 (plus the strategy corners) — the same properties, deterministic inputs.
 Only the strategy surface this suite uses is implemented (integers,
-floats with bounds).
+floats with bounds, sampled_from, booleans).
 """
 from __future__ import annotations
 
@@ -53,6 +53,18 @@ class _Floats:
         return (self.lo, self.hi)
 
 
+@dataclasses.dataclass(frozen=True)
+class _SampledFrom:
+    choices: tuple
+
+    def sample(self, rng):
+        return self.choices[int(rng.integers(0, len(self.choices)))]
+
+    @property
+    def corners(self):
+        return (self.choices[0], self.choices[-1])
+
+
 class _Strategies:
     @staticmethod
     def integers(min_value, max_value):
@@ -61,6 +73,14 @@ class _Strategies:
     @staticmethod
     def floats(min_value, max_value, **_kw):
         return _Floats(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(tuple(elements))
+
+    @staticmethod
+    def booleans():
+        return _SampledFrom((False, True))
 
 
 st = strategies = _Strategies()

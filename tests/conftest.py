@@ -1,8 +1,6 @@
 """Shared pytest config.  NOTE: no XLA_FLAGS here — smoke tests and benches
-must see 1 device; only launch/dryrun.py (subprocess) forces 512."""
-import pytest
+must see 1 device; only launch/dryrun.py (subprocess) forces 512.
 
-
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers", "slow: long-running integration tests")
+Markers (slow, quality) are registered in pyproject.toml; the default
+run deselects `quality` (addopts) — the CI quality job selects it back
+with `-m quality`."""

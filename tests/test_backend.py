@@ -151,6 +151,38 @@ class TestCensusEquivalence:
         assert cfg1.kinds == "seq" and cfg1.spawn_modes == "at_open"
 
 
+class TestScenarioBackendParity:
+    """Backend parity on the QUALITY SWEEP's scenario configurations
+    (repro.data.streams.SCENARIOS) — the realistic multi-pattern shapes
+    the paper evaluation runs, not only the synthetic q1/q4 fixtures:
+    the stock Q1 window grid (3 SEQ patterns), the soccer Q3 any_n grid
+    (8 bound ANY patterns) and the bus Q4 slide windows, each at an odd,
+    non-tile-multiple PM-store size, with match emission on and the
+    pSPICE shed path hot."""
+
+    @pytest.mark.parametrize("scenario,max_pms",
+                             [("stock", 37), ("soccer", 53), ("bus", 61)])
+    def test_scenario_xla_pallas_bitwise(self, scenario, max_pms):
+        sc = streams.get_scenario(scenario)
+        specs = sc.specs()
+        cp = pat.compile_patterns(specs)
+        cfg = runner.default_config(cp, max_pms=max_pms,
+                                    latency_bound=0.005,
+                                    shedder=eng.SHED_PSPICE,
+                                    emit_matches=True, **COST)
+        model = eng.make_model(cp, cfg)
+        rate = 3.0 / (cfg.c_base + cfg.c_match * 0.3 * max_pms)
+        ev = streams.classify(specs, sc.raw(n=500), rate=rate, seed=0)
+        cx, ox = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(cx.pms_shed) > 0, "fixture must exercise the shed path"
+        cfg_p = dataclasses.replace(cfg, backend=eng.BACKEND_PALLAS)
+        cp_, op_ = eng.run_engine(cfg_p, model, ev, eng.init_carry(cfg_p))
+        _assert_tree_equal(cx, cp_, f"{scenario} carry")
+        _assert_tree_equal(ox, op_, f"{scenario} outs")
+        # The scenario's match identities decode identically per backend.
+        assert eng.match_sets(ox) == eng.match_sets(op_), scenario
+
+
 class TestNoSortInHotPath:
     """The compiled per-event step must contain no sort for the default
     config — spawn allocation and both shed plans are sort-free."""

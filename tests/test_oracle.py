@@ -1,0 +1,227 @@
+"""Differential testing: the vectorized engine vs the NumPy oracle.
+
+``repro.eval.oracle`` is an independent event-at-a-time implementation
+of the operator semantics (DESIGN.md §9).  This suite proves the fast
+engine equals it:
+
+  1. NO-SHED EXACTNESS (the acceptance bar): 50 generated scenarios —
+     random small PatternSpecs + random event streams — where the
+     engine's match set equals the oracle's EXACTLY, for backend="xla"
+     and "pallas", monolithic ``run_engine`` and chunked
+     ``run_engine_chunk`` (ragged chunk sizes included).
+  2. SHEDDER EXACTNESS: with the literal sort plan pinned
+     (``shed_plan="sort"``), every shedder (pspice / PM-BL / E-BL)
+     reproduces the oracle's match set, shed counters and f32 latency
+     trace bit-for-bit on seeded overloaded streams.
+  3. PROPERTY FORM: the same no-shed equality as a hypothesis property
+     over seeds and pattern-family choices (deterministic fallback
+     sweep when hypothesis isn't installed).
+
+All generated scenarios share ONE static EngineConfig (shapes are
+padded to fixed P/M/C/N), so the whole suite compiles each entry point
+once per backend — scenario randomness lives in the model arrays and
+the event streams, never in the compiled program.
+"""
+import dataclasses
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # declared in requirements-dev.txt; deterministic
+    from _hyp_fallback import given, settings, st  # fallback sweeps
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.cep import runner
+from repro.data import streams
+from repro.eval import oracle as orc
+from repro import runtime as RT
+
+COST = dict(c_base=3e-4, c_match=6e-5, c_shed_base=1.5e-4, c_shed_pm=1.5e-6,
+            c_ebl=6e-5)
+
+# Fixed padded shapes: every generated scenario compiles into the same
+# executables (P patterns, M states, C classes, N PM slots).
+P, M, C, N_PMS, A, K = 2, 8, 4, 16, 6, 4
+N_EVENTS = 256
+
+FAMILIES = ("seq", "seq_bind", "seq_any", "slide_any")
+
+
+def _random_spec(rng, family=None) -> pat.PatternSpec:
+    """A random small PatternSpec within the padded shape budget."""
+    family = family if family is not None else FAMILIES[
+        int(rng.integers(len(FAMILIES)))]
+    ws = int(rng.integers(20, 140))
+    if family in ("seq", "seq_bind"):
+        length = int(rng.integers(2, 5))                 # states <= 5 <= M
+        seq = [int(rng.integers(1, C + 1)) for _ in range(length)]
+        return pat.seq_pattern(f"{family}", seq, num_classes=C,
+                               window_size=ws,
+                               uses_binding=(family == "seq_bind"))
+    any_n = int(rng.integers(2, 5))                      # states <= 6 <= M
+    if family == "seq_any":
+        return pat.seq_any_pattern("seq_any", any_n=any_n, window_size=ws)
+    slide = int(rng.integers(10, 50))
+    return pat.any_pattern("slide_any", any_n=any_n, window_size=ws,
+                           slide=slide)
+
+
+def _compile_padded(specs) -> pat.CompiledPatterns:
+    """compile_patterns with trans padded to the FIXED (M, C+1) shape so
+    every scenario shares one jit cache entry."""
+    trans = np.stack([pat.build_transition_table(s, M, C) for s in specs])
+    return pat.CompiledPatterns(
+        specs=tuple(specs), trans=trans,
+        kind=np.array([s.kind for s in specs], np.int32),
+        spawn_mode=np.array([s.spawn_mode for s in specs], np.int32),
+        window_size=np.array([s.window_size for s in specs], np.int32),
+        slide=np.array([max(s.slide, 1) for s in specs], np.int32),
+        final_state=np.array([s.final_state for s in specs], np.int32),
+        weight=np.array([s.weight for s in specs], np.float32),
+        uses_binding=np.array([s.uses_binding for s in specs], bool),
+        proc_cost=np.array([s.proc_cost for s in specs], np.float32),
+        spawn_counts=np.array([s.any_spawn_counts for s in specs], bool),
+    )
+
+
+def _base_cfg(shedder=eng.SHED_NONE) -> eng.EngineConfig:
+    return eng.EngineConfig(
+        num_patterns=P, max_states=M, max_classes=C, max_pms=N_PMS,
+        max_any_ids=A, ring_size=K, latency_bound=0.01,
+        emit_matches=True, shedder=shedder, **COST)
+
+
+def _random_events(rng, n=N_EVENTS) -> eng.EventBatch:
+    """A random event stream: dense enough in matchable classes, opens,
+    ids and bindings that spawning, advancing, completion, expiry and
+    store overflow all occur."""
+    cls = np.where(rng.random((n, P)) < 0.4,
+                   rng.integers(1, C + 1, size=(n, P)), 0).astype(np.int32)
+    opens = (rng.random((n, P)) < 0.15)
+    bind = rng.integers(-1, 3, size=(n, P)).astype(np.int32)
+    ev_id = rng.integers(0, 8, size=n).astype(np.int32)
+    rate = 1.0 / (COST["c_base"] + COST["c_match"] * 0.3 * N_PMS)
+    return eng.EventBatch(
+        ev_class=jnp.asarray(cls), ev_bind=jnp.asarray(bind),
+        ev_open=jnp.asarray(opens), ev_id=jnp.asarray(ev_id),
+        ev_rand=jnp.asarray(rng.random(n), dtype=jnp.float32),
+        ebl_raw=jnp.asarray(rng.random(n), dtype=jnp.float32),
+        arrival=jnp.asarray(np.arange(n) / rate, dtype=jnp.float32))
+
+
+def _scenario(seed, families=None):
+    rng = np.random.default_rng(seed)
+    fams = [None, None] if families is None else list(families)
+    specs = [_random_spec(rng, f) for f in fams]
+    cp = _compile_padded(specs)
+    cfg = _base_cfg()
+    model = eng.make_model(cp, cfg)
+    return cfg, model, _random_events(rng)
+
+
+def _assert_matches_oracle(cfg, model, ev, o, what):
+    """Engine (both backends × monolithic/chunked) == oracle, exactly."""
+    for backend in (eng.BACKEND_XLA, eng.BACKEND_PALLAS):
+        cfg_b = dataclasses.replace(cfg, backend=backend)
+        carry, outs = eng.run_engine(cfg_b, model, ev, eng.init_carry(cfg_b))
+        tag = f"{what}/{backend}"
+        assert eng.match_sets(outs) == o.matches, tag
+        np.testing.assert_array_equal(
+            np.asarray(carry.complex_count), o.complex_count, tag)
+        np.testing.assert_array_equal(
+            np.asarray(carry.pms_created), o.pms_created, tag)
+        assert float(carry.overflow) == o.overflow, tag
+        np.testing.assert_array_equal(
+            np.asarray(outs.l_e), o.l_e, f"{tag} l_e")
+
+        # chunked (ragged: 100 does not divide 256) replays the same run
+        carry_c = eng.init_carry(cfg_b)
+        found = [set() for _ in range(P)]
+        for start, piece in RT.iter_chunks(ev, 100):
+            carry_c, outs_c = eng.run_engine_chunk(
+                cfg_b, model, piece, carry_c, jnp.int32(start))
+            for p, s in enumerate(eng.match_sets(outs_c, start=start)):
+                found[p] |= s
+        assert found == o.matches, f"{tag}/chunked"
+        np.testing.assert_array_equal(
+            np.asarray(carry_c.complex_count), o.complex_count,
+            f"{tag}/chunked")
+        assert float(carry_c.overflow) == o.overflow, f"{tag}/chunked"
+
+
+class TestDifferentialNoShed:
+    """Acceptance bar: >= 50 generated scenarios, exact equality on both
+    backends, monolithic and chunked."""
+
+    @pytest.mark.parametrize("seed", range(50))
+    def test_generated_scenario_equals_oracle(self, seed):
+        cfg, model, ev = _scenario(seed)
+        o = orc.run_oracle(cfg, model, ev)
+        # The scenarios must exercise real behavior, not vacuous streams.
+        assert o.pms_created.sum() > 0, "scenario spawned nothing"
+        _assert_matches_oracle(cfg, model, ev, o, f"seed={seed}")
+
+
+class TestDifferentialShedders:
+    """With the literal sort-based Algorithm 2 pinned, every shedder
+    reproduces the oracle exactly on seeded overloaded streams —
+    including the shed counters and the f32 simulated-latency trace."""
+
+    @staticmethod
+    def _fixture(name, shedder, seed=0):
+        specs = [pat.make_q1(window_size=400, num_symbols=4) if name == "q1"
+                 else pat.make_q4(any_n=3, window_size=120, slide=40)]
+        cp = pat.compile_patterns(specs)
+        cfg = runner.default_config(
+            cp, max_pms=48, latency_bound=0.005, shedder=shedder,
+            emit_matches=True, shed_plan="sort", **COST)
+        model = eng.make_model(cp, cfg)
+        rate = 3.0 / (cfg.c_base + cfg.c_match * 0.3 * cfg.max_pms)
+        raw = streams.gen_stock(600, num_symbols=50, pattern_symbols=4,
+                                p_class=0.05, seed=100 + seed)
+        ev = streams.classify(specs, raw, rate=rate, seed=seed)
+        return cfg, model, ev
+
+    @pytest.mark.parametrize("name", ["q1", "q4"])
+    @pytest.mark.parametrize("shedder", [eng.SHED_NONE, eng.SHED_PSPICE,
+                                         eng.SHED_PMBL, eng.SHED_EBL])
+    def test_shedder_run_equals_oracle(self, name, shedder):
+        cfg, model, ev = self._fixture(name, shedder)
+        carry, outs = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        o = orc.run_oracle(cfg, model, ev, seed=0)
+        tag = f"{name}/{shedder}"
+        if shedder in (eng.SHED_PSPICE, eng.SHED_PMBL):
+            assert o.pms_shed > 0, f"{tag}: fixture must shed"
+        if shedder == eng.SHED_EBL:
+            assert o.ebl_dropped > 0, f"{tag}: fixture must drop"
+        assert eng.match_sets(outs) == o.matches, tag
+        np.testing.assert_array_equal(np.asarray(carry.complex_count),
+                                      o.complex_count, tag)
+        np.testing.assert_array_equal(np.asarray(carry.pms_created),
+                                      o.pms_created, tag)
+        assert float(carry.pms_shed) == o.pms_shed, tag
+        assert float(carry.shed_calls) == o.shed_calls, tag
+        assert float(carry.overflow) == o.overflow, tag
+        assert float(carry.ebl_dropped) == o.ebl_dropped, tag
+        np.testing.assert_array_equal(np.asarray(outs.l_e), o.l_e,
+                                      f"{tag} l_e")
+        np.testing.assert_array_equal(np.asarray(outs.shed), o.shed, tag)
+        np.testing.assert_array_equal(np.asarray(outs.dropped), o.dropped,
+                                      tag)
+
+
+class TestDifferentialProperty:
+    """The no-shed equality as a property over generated scenarios."""
+
+    @given(st.integers(0, 2**20),
+           st.sampled_from(FAMILIES), st.sampled_from(FAMILIES))
+    @settings(max_examples=12, deadline=None)
+    def test_property_engine_equals_oracle(self, seed, fam_a, fam_b):
+        cfg, model, ev = _scenario(seed, families=(fam_a, fam_b))
+        o = orc.run_oracle(cfg, model, ev)
+        _assert_matches_oracle(cfg, model, ev, o,
+                               f"prop seed={seed} {fam_a}+{fam_b}")

@@ -1,0 +1,251 @@
+"""Quality subsystem tests: metrics units + metamorphic shedding laws.
+
+The metamorphic laws hold for ANY shedder configuration, so they guard
+the engine and the shedders without needing an oracle run:
+
+  * SUBSET: a shed run's window-projected match multiset is contained in
+    the no-shed ground truth's (shedding can lose complex events, never
+    invent them) — provided the ground-truth run never overflowed its PM
+    store, which the fixtures assert.
+  * IDENTITY AT ZERO: a shedder that never fires (latency bound far
+    above any realizable latency) is BITWISE identical to shedding
+    disabled — whole carry and outputs.
+  * MONOTONICITY (smoke): on the seeded scenarios, a higher sustained
+    overload level does not decrease the false-negative ratio.
+"""
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.cep import runner
+from repro.configs import pspice_paper as pp
+from repro.data import streams
+from repro.eval import quality as Q
+
+COST = dict(c_base=3e-4, c_match=6e-5, c_shed_base=1.5e-4, c_shed_pm=1.5e-6,
+            c_ebl=6e-5)
+
+SHEDDING = (eng.SHED_PSPICE, eng.SHED_PMBL, eng.SHED_EBL)
+
+
+# ---------------------------------------------------------------------------
+# Metric units
+# ---------------------------------------------------------------------------
+
+class TestCompareMatchSets:
+    def test_exact_equality_is_perfect_recall(self):
+        m = [{(1, -1, 5), (9, -1, 20)}, {(3, 2, 8)}]
+        rep = Q.compare_match_sets(m, m)
+        assert rep.recall == 1.0 and rep.fn_ratio == 0.0
+        assert rep.n_spurious == 0 and rep.n_gt == 3 == rep.n_found
+
+    def test_lost_match_counts_as_fn(self):
+        gt = [{(1, -1, 5), (9, -1, 20)}]
+        found = [{(1, -1, 5)}]
+        rep = Q.compare_match_sets(found, gt)
+        assert rep.recall == 0.5 and rep.fn_ratio == 0.5
+        assert rep.per_pattern_fn[0] == 0.5
+
+    def test_window_key_forgives_shifted_end(self):
+        """The same window completing via a later constituent event is a
+        detection under the window key, a miss under the identity key."""
+        gt = [{(1, -1, 5)}]
+        found = [{(1, -1, 7)}]                 # same window, later end
+        win = Q.compare_match_sets(found, gt, key="window")
+        ident = Q.compare_match_sets(found, gt, key="identity")
+        assert win.recall == 1.0 and win.n_spurious == 0
+        assert ident.recall == 0.0 and ident.n_spurious == 1
+
+    def test_window_key_is_a_multiset(self):
+        """An IN_WINDOWS window can complete twice; finding only one of
+        the two completions is recall 1/2, not 1."""
+        gt = [{(1, 4, 5), (1, 4, 9)}]          # same window, two matches
+        found = [{(1, 4, 5)}]
+        rep = Q.compare_match_sets(found, gt, key="window")
+        assert rep.recall == 0.5
+
+    def test_weights(self):
+        gt = [{(0, -1, 1)}, {(0, -1, 1)}]
+        found = [{(0, -1, 1)}, set()]
+        rep = Q.compare_match_sets(found, gt, weights=np.array([3.0, 1.0]))
+        assert rep.recall == pytest.approx(0.75)
+
+    def test_empty_ground_truth_is_recall_one(self):
+        rep = Q.compare_match_sets([set()], [set()])
+        assert rep.recall == 1.0 and rep.fn_ratio == 0.0
+
+    def test_pattern_count_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            Q.compare_match_sets([set()], [set(), set()])
+
+
+class TestScalarMetrics:
+    def test_latency_compliance(self):
+        l_e = np.array([0.1, 0.5, 1.5, 2.0])
+        assert Q.latency_compliance(l_e, 1.0) == 0.5
+        assert Q.latency_compliance(np.array([]), 1.0) == 1.0
+
+    def test_degradation_curve_sorts_levels(self):
+        pts = [(1.6, {"fn_ratio": 0.4, "drop_fraction": 0.5,
+                      "lb_compliance": 0.9}),
+               (1.2, {"fn_ratio": 0.1, "drop_fraction": 0.2,
+                      "lb_compliance": 1.0})]
+        curve = Q.degradation_curve(pts)
+        assert curve["levels"] == [1.2, 1.6]
+        assert curve["fn_ratio"] == [0.1, 0.4]
+
+
+# ---------------------------------------------------------------------------
+# Metamorphic shedding laws
+# ---------------------------------------------------------------------------
+
+def _fixture(name, shedder, max_pms=96, n=900, rate_mult=3.0,
+             latency_bound=0.005, **cfg_kw):
+    specs = [pat.make_q1(window_size=400, num_symbols=4) if name == "q1"
+             else pat.make_q4(any_n=3, window_size=120, slide=40)]
+    cp = pat.compile_patterns(specs)
+    cfg = runner.default_config(cp, max_pms=max_pms,
+                                latency_bound=latency_bound,
+                                shedder=shedder, emit_matches=True,
+                                **COST, **cfg_kw)
+    model = eng.make_model(cp, cfg)
+    rate = rate_mult * 3.0 / (cfg.c_base + cfg.c_match * 0.3 * max_pms)
+    raw = streams.gen_stock(n, num_symbols=50, pattern_symbols=4,
+                            p_class=0.05, seed=101)
+    ev = streams.classify(specs, raw, rate=rate, seed=1)
+    return cfg, model, ev
+
+
+class TestShedderSubsetLaw:
+    @pytest.mark.parametrize("name", ["q1", "q4"])
+    @pytest.mark.parametrize("shedder", SHEDDING)
+    def test_shed_matches_subset_of_ground_truth(self, name, shedder):
+        cfg, model, ev = _fixture(name, shedder)
+        gt_cfg = dataclasses.replace(cfg, shedder=eng.SHED_NONE)
+        gt_c, gt_o = eng.run_engine(gt_cfg, model, ev,
+                                    eng.init_carry(gt_cfg))
+        assert float(gt_c.overflow) == 0.0, \
+            "fixture invalid: ground truth overflowed its PM store"
+        c, o = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        if shedder == eng.SHED_EBL:
+            assert float(c.ebl_dropped) > 0, "fixture must drop"
+        else:
+            assert float(c.pms_shed) > 0, "fixture must shed"
+        found = Q.project_matches(eng.match_sets(o), key="window")
+        gt = Q.project_matches(eng.match_sets(gt_o), key="window")
+        for p, (f, g) in enumerate(zip(found, gt)):
+            extra = f - g                      # multiset difference
+            assert not extra, (
+                f"{name}/{shedder} pattern {p}: shed run invented "
+                f"window completions {dict(extra)}")
+
+    @pytest.mark.parametrize("shedder", SHEDDING)
+    def test_report_spurious_is_zero_vs_ground_truth(self, shedder):
+        cfg, model, ev = _fixture("q1", shedder)
+        gt_cfg = dataclasses.replace(cfg, shedder=eng.SHED_NONE)
+        _, gt_o = eng.run_engine(gt_cfg, model, ev, eng.init_carry(gt_cfg))
+        _, o = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        rep = Q.compare_match_sets(eng.match_sets(o), eng.match_sets(gt_o))
+        assert rep.n_spurious == 0
+        assert 0.0 <= rep.fn_ratio <= 1.0
+
+
+class TestZeroShedIdentity:
+    """shedder=X with a bound no latency can reach == shedder disabled,
+    bitwise, for every shedder — the rho=0 / never-fires limit."""
+
+    @pytest.mark.parametrize("shedder", SHEDDING)
+    def test_never_firing_shedder_is_bitwise_noshed(self, shedder):
+        cfg, model, ev = _fixture("q1", shedder, latency_bound=1e9)
+        base = dataclasses.replace(cfg, shedder=eng.SHED_NONE)
+        c1, o1 = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        c0, o0 = eng.run_engine(base, model, ev, eng.init_carry(base))
+        assert float(c1.pms_shed) == 0.0 and float(c1.ebl_dropped) == 0.0
+        for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(o1), jax.tree.leaves(o0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.quality
+class TestMonotonicity:
+    """Sustained-overload monotonicity smoke on the seeded scenarios:
+    more overload => the FN ratio does not decrease (small slack for the
+    discrete match counts)."""
+
+    SLACK = 0.02
+
+    @pytest.mark.parametrize("scenario", ["bus", "soccer"])
+    def test_fn_nondecreasing_in_overload(self, scenario):
+        sc = streams.get_scenario(scenario)
+        raw = sc.raw(n=9000)
+        fns = {sh: [] for sh in SHEDDING}
+        for mult in (1.2, 1.6, 2.0):
+            res = runner.run_experiment(
+                sc.specs(), raw, shedders=SHEDDING, rate_multiplier=mult,
+                max_pms=sc.max_pms, bin_size=sc.bin_size,
+                latency_bound=sc.latency_bound, seed=sc.seed, **pp.COST)
+            for sh in SHEDDING:
+                fns[sh].append(res[sh].fn_match)
+        for sh, curve in fns.items():
+            assert curve[0] <= curve[-1] + self.SLACK, (sh, curve)
+            for lo, hi in zip(curve, curve[1:]):
+                assert hi >= lo - self.SLACK, (sh, curve)
+
+
+@pytest.mark.quality
+class TestExperimentSurfacesQuality:
+    """run_experiment's summary carries the match-set metrics
+    (the recall/FN surface, not only latency stats)."""
+
+    @pytest.fixture(scope="class")
+    def results(self):
+        sc = streams.get_scenario("bus")
+        return runner.run_experiment(
+            sc.specs(), sc.raw(n=9000), shedders=SHEDDING,
+            rate_multiplier=1.4, max_pms=sc.max_pms, bin_size=sc.bin_size,
+            latency_bound=sc.latency_bound, seed=sc.seed, **pp.COST)
+
+    def test_metrics_populated(self, results):
+        for sh, er in results.items():
+            assert er.recall is not None and er.fn_match is not None
+            assert er.recall == pytest.approx(1.0 - er.fn_match)
+            assert 0.0 <= er.fn_match <= 1.0
+            assert er.n_gt_matches > 0
+            assert er.per_pattern_fn is not None
+            assert len(er.per_pattern_fn) == len(er.ground_truth
+                                                 .complex_count)
+            assert 0.0 <= er.lb_compliance <= 1.0
+
+    def test_match_sets_attached_to_runs(self, results):
+        for er in results.values():
+            assert er.result.matches is not None
+            assert er.ground_truth.matches is not None
+
+    def test_ordering_headline_bus(self, results):
+        fn = {sh: er.fn_match for sh, er in results.items()}
+        assert fn[eng.SHED_PSPICE] <= fn[eng.SHED_PMBL] + 1e-9
+        assert fn[eng.SHED_PSPICE] <= fn[eng.SHED_EBL] + 1e-9
+
+
+class TestDropFractionAndEmitGating:
+    def test_drop_fraction_pm_shedder(self):
+        cfg, model, ev = _fixture("q1", eng.SHED_PSPICE)
+        c, o = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        res = eng.summarize(c, o)
+        assert 0.0 < Q.drop_fraction(res) <= 1.0
+
+    def test_match_sets_requires_emission(self):
+        cfg, model, ev = _fixture("q1", eng.SHED_NONE)
+        cfg = dataclasses.replace(cfg, emit_matches=False)
+        carry, o = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert o.match_open.shape[-1] == 0
+        with pytest.raises(ValueError):
+            eng.match_sets(o)
+        assert eng.summarize(carry, o).matches is None
