@@ -1,26 +1,38 @@
-"""Engine hot-path throughput benchmark (DESIGN.md §8).
+"""Engine hot-path throughput benchmark (DESIGN.md §8/§10).
 
-Proves the allocation-free hot path: the default engine (O(N) cumsum
-spawn allocator + O(N) histogram-threshold shed + static pattern census)
-against the PRE-PR configuration (stable-argsort allocator, sort-based
-Algorithm 2, no census) on identical streams.  Three measurements,
-written to BENCH_engine.json (committed at the repo root as the perf
-trajectory; CI re-runs --quick per PR and gates on regression):
+Measures the event-block megakernel (``backend="pallas_block"``,
+kernels/block_step.py — the PM store resident across ``block_events``
+fused events) against the per-event xla scan and against the PRE-PR-3
+configuration (stable-argsort allocator, sort-based Algorithm 2, no
+census) on identical streams.  Written to BENCH_engine.json (committed
+at the repo root as the perf trajectory; CI re-runs --quick per PR and
+gates on regression):
 
   single_lane   (headline)  events/sec on the paper config (Q1,
       ws=3000, MAX_PMS=128 — configs/pspice_paper.py) under 120%
-      overload with the pSPICE shedder, new vs pre-PR.  Target: ≥1.5×.
-  single_lane_large   the same at the engine-default 2048-slot store,
-      where the per-event argsort dominated hardest.
-  lanes   L=8 tenant lanes through one lane-batched scan, new vs pre-PR.
-  chunk_sweep   single-lane chunked runtime (donated carry+events, fused
-      device-side telemetry) vs the monolithic scan.  Target: chunk=1024
-      overhead <10%.
+      overload with the pSPICE shedder: block kernel vs per-event xla
+      vs pre-PR legacy.
+  single_lane_large   the same at the engine-default 2048-slot store —
+      the memory-traffic-bound regime the block kernel targets.
+      Target: ≥2x over the per-event path.
+  lanes   L=8 tenant lanes through one lane-batched scan (the vmapped
+      block kernel runs W=128: per-lane stores are small, so bigger
+      blocks amortize the per-block machinery).
+  block_sweep   single-lane large-store events/s per W ∈ {8, 32, 128}
+      — the block-size tuning artifact CI uploads per PR.
+  chunk_sweep   single-lane chunked runtime (auto-grouped chunk groups,
+      donated carry+events, fused device-side telemetry) vs the
+      monolithic scan.  Target: chunk=256 overhead ≤5%.
+  roofline   analytic arithmetic-intensity estimate for the fused vs
+      unfused step (launch/roofline.py engine_block_intensity).
 
-Regression gate (--check BASELINE.json): the headline events/sec must not
-regress more than 20% against the checked-in baseline.  CI boxes differ
-from the box that wrote the baseline, so the comparison is machine-
-normalized by the legacy engine's throughput measured in the SAME run:
+Regression gate (--check BASELINE.json): events/sec must not regress
+more than 20% (35% on the noisier large-store cell) against the
+checked-in baseline on the single-lane cells, and the chunk=256
+overhead must stay within the 5% budget plus a 5-point quick-mode
+noise allowance.  CI boxes differ from the box that wrote the
+baseline, so throughput comparisons are machine-normalized by the
+legacy engine's throughput measured in the SAME run:
     pass  ⇔  new_now ≥ 0.8 · new_base · (legacy_now / legacy_base)
 (the legacy path never changes, so it is the machine-speed probe).
 
@@ -44,16 +56,25 @@ from repro.cep import patterns as pat
 from repro.cep import runner
 from repro.configs import pspice_paper as pp
 from repro.data import streams
+from repro.launch import roofline
 from repro import runtime as RT
 
 REPEATS = 3  # best-of-N walls (2-core CI boxes are noisy)
+LANES_W = 128  # block size for the lane cell (small stores: amortize)
 
 
 def _legacy(cfg: eng.EngineConfig) -> eng.EngineConfig:
-    """The pre-PR engine: per-event argsort spawn allocator, sort-based
-    Algorithm 2, no pattern-census specialization."""
-    return dataclasses.replace(cfg, spawn_alloc="argsort", shed_plan="sort",
+    """The pre-PR-3 engine: per-event argsort spawn allocator, sort-based
+    Algorithm 2, no pattern-census specialization, per-event scan."""
+    return dataclasses.replace(cfg, backend=eng.BACKEND_XLA,
+                               spawn_alloc="argsort", shed_plan="sort",
                                kinds="mixed", spawn_modes="mixed")
+
+
+def _blocked(cfg: eng.EngineConfig, w: int | None = None):
+    return dataclasses.replace(
+        cfg, backend=eng.BACKEND_PALLAS_BLOCK,
+        block_events=w if w is not None else cfg.block_events)
 
 
 def _paper_workload(n: int, max_pms: int, seed: int = 7):
@@ -83,13 +104,27 @@ def _time_engine(cfg, model, ev, n, reps) -> float:
 
 def bench_single_lane(n: int, max_pms: int, reps: int) -> dict:
     cfg, model, ev = _paper_workload(n, max_pms)
-    new = _time_engine(cfg, model, ev, n, reps)
+    new = _time_engine(_blocked(cfg), model, ev, n, reps)
+    xla = _time_engine(cfg, model, ev, n, reps)
     legacy = _time_engine(_legacy(cfg), model, ev, n, reps)
     return {
         "n_events": n, "max_pms": max_pms,
-        "events_per_s_new": new, "events_per_s_legacy": legacy,
+        "block_events": cfg.block_events,
+        "events_per_s_new": new, "events_per_s_xla": xla,
+        "events_per_s_legacy": legacy,
+        "speedup_vs_xla": new / xla,
         "speedup_vs_pre_pr": new / legacy,
     }
+
+
+def bench_block_sweep(n: int, max_pms: int, reps: int,
+                      ws=(8, 32, 128)) -> list[dict]:
+    """Single-lane large-store events/s per block size W."""
+    cfg, model, ev = _paper_workload(n, max_pms)
+    return [{"block_events": w, "max_pms": max_pms,
+             "events_per_s": _time_engine(_blocked(cfg, w), model, ev, n,
+                                          reps)}
+            for w in ws]
 
 
 def bench_lanes(num_lanes: int, n_per_lane: int, max_pms: int,
@@ -119,24 +154,34 @@ def bench_lanes(num_lanes: int, n_per_lane: int, max_pms: int,
         jax.block_until_ready(out.sim_time)
         return time.perf_counter() - t0
 
-    run(cfg)
-    new = total / min(run(cfg) for _ in range(reps))
-    run(_legacy(cfg))
-    legacy = total / min(run(_legacy(cfg)) for _ in range(reps))
+    def best(c):
+        run(c)
+        return total / min(run(c) for _ in range(reps))
+
+    new = best(_blocked(cfg, LANES_W))
+    xla = best(cfg)
+    legacy = best(_legacy(cfg))
     return {
         "num_lanes": num_lanes, "events_per_lane": n_per_lane,
         "max_pms": max_pms, "total_events": total,
-        "events_per_s_new": new, "events_per_s_legacy": legacy,
+        "block_events": LANES_W,
+        "events_per_s_new": new, "events_per_s_xla": xla,
+        "events_per_s_legacy": legacy,
+        "speedup_vs_xla": new / xla,
         "speedup_vs_pre_pr": new / legacy,
     }
 
 
 def bench_chunk_sweep(n: int, chunk_sizes, max_pms: int,
                       reps: int) -> list[dict]:
+    """Chunked-runtime overhead vs the monolithic scan, on the block
+    backend (the default auto-grouping policy sizes chunk groups —
+    runtime.chunker.suggested_group_chunks)."""
     specs = [pat.make_q1(window_size=400, num_symbols=4)]
     cp = pat.compile_patterns(specs)
     cfg = runner.default_config(cp, max_pms=max_pms, latency_bound=1.0,
                                 shedder=eng.SHED_PSPICE, **pp.COST)
+    cfg = _blocked(cfg)
     model = eng.make_model(cp, cfg)
     rate = 1.2 / (cfg.c_base + cfg.c_match * 0.5 * max_pms)
     raw = streams.gen_stock(n, num_symbols=50, pattern_symbols=4,
@@ -169,22 +214,54 @@ def bench_chunk_sweep(n: int, chunk_sizes, max_pms: int,
     return rows
 
 
-def check_regression(out: dict, baseline_path: str) -> bool:
-    """Machine-normalized ±20% events/sec gate vs the checked-in
-    baseline (see module docstring).  Returns True when passing."""
-    with open(baseline_path) as f:
-        base = json.load(f)
-    b, c = base["single_lane"], out["single_lane"]
-    norm = c["events_per_s_legacy"] / b["events_per_s_legacy"]
-    floor = 0.8 * b["events_per_s_new"] * norm
+def _gate_cell(out: dict, base: dict, cell: str, norm: float,
+               factor: float = 0.8) -> bool:
+    b, c = base[cell], out[cell]
+    floor = factor * b["events_per_s_new"] * norm
     ok = c["events_per_s_new"] >= floor
-    print(f"# gate: new={c['events_per_s_new']:.0f} ev/s, "
+    print(f"# gate[{cell}]: new={c['events_per_s_new']:.0f} ev/s, "
           f"baseline={b['events_per_s_new']:.0f}, machine-norm={norm:.2f}, "
           f"floor={floor:.0f} → {'PASS' if ok else 'FAIL'}",
           file=sys.stderr)
-    if not ok:
-        print("# events/s regressed >20% vs checked-in baseline",
+    return ok
+
+
+def check_regression(out: dict, baseline_path: str) -> bool:
+    """Machine-normalized ±20% events/sec gate vs the checked-in baseline
+    on BOTH single-lane cells (paper config and the 2048-slot store this
+    PR's kernel targets), plus the chunk=256 overhead ceiling.  Returns
+    True when passing."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    norm = (out["single_lane"]["events_per_s_legacy"] /
+            base["single_lane"]["events_per_s_legacy"])
+    ok = _gate_cell(out, base, "single_lane", norm)
+    if "single_lane_large" in base:
+        norm_l = (out["single_lane_large"]["events_per_s_legacy"] /
+                  base["single_lane_large"]["events_per_s_legacy"])
+        # The 2048-slot block cell has higher run-to-run variance than
+        # the legacy probe tracks (quick-mode spread of 0.68-1.03x the
+        # baseline observed on a loaded 2-core box); a 35% floor still
+        # catches the regression class the cell exists for (the ~4x
+        # fused-kernel win reverting toward the ~5k ev/s per-event
+        # path, which lands at ~0.23x).
+        ok &= _gate_cell(out, base, "single_lane_large", norm_l,
+                         factor=0.65)
+    cell256 = [r for r in out["chunk_sweep"] if r["chunk_size"] == 256]
+    if cell256:
+        # Budget is ≤5% (DESIGN.md §8; the committed full-run sweep sits
+        # at ~0%); the CI ceiling adds a 5-point allowance for quick-mode
+        # noise on shared 2-core boxes.
+        ov = cell256[0]["overhead_vs_monolithic_pct"]
+        ok256 = ov <= 10.0
+        print(f"# gate[chunk=256]: overhead={ov:.1f}% (budget 5% + 5 "
+              f"noise allowance) → {'PASS' if ok256 else 'FAIL'}",
               file=sys.stderr)
+        ok &= ok256
+    if not ok:
+        print("# events/s regressed past a cell's floor (20% paper cell "
+              "/ 35% large cell) or chunk overhead blew the ceiling, vs "
+              "checked-in baseline", file=sys.stderr)
     return ok
 
 
@@ -200,9 +277,14 @@ def main(argv=None) -> None:
     # configurations, so per-event rates stay comparable with the
     # committed full-run baseline (the --check gate relies on this).
     if args.quick:
-        n, n_large, reps = 8000, 4000, 2
+        # n_large stays big enough that fixed per-run costs don't eat
+        # into the 20% gate margin at the slow 2048-slot per-event rate,
+        # and the chunk sweep keeps the full-run stream length: at 8k
+        # events its walls are ~50 ms and the overhead gate becomes
+        # noise (±20% observed) — the full 32k costs CI ~1 s.
+        n, n_large, reps = 8000, 8000, 2
         L, n_lane = 4, 4096
-        sweep_n, sweep = 8192, (256, 1024)
+        sweep_n, sweep = 32768, (256, 1024)
     else:
         n, n_large, reps = 30000, 15000, REPEATS
         L, n_lane = 8, 8192
@@ -216,22 +298,39 @@ def main(argv=None) -> None:
     out["single_lane"] = head
     print(f"single_lane:max_pms={pp.MAX_PMS},"
           f"{head['events_per_s_new']:.0f},"
-          f"speedup_vs_pre_pr={head['speedup_vs_pre_pr']:.2f}x")
+          f"speedup_vs_xla={head['speedup_vs_xla']:.2f}x,"
+          f"vs_pre_pr={head['speedup_vs_pre_pr']:.2f}x")
     large = bench_single_lane(n_large, 2048, reps)
     out["single_lane_large"] = large
     print(f"single_lane:max_pms=2048,{large['events_per_s_new']:.0f},"
-          f"speedup_vs_pre_pr={large['speedup_vs_pre_pr']:.2f}x")
+          f"speedup_vs_xla={large['speedup_vs_xla']:.2f}x,"
+          f"vs_pre_pr={large['speedup_vs_pre_pr']:.2f}x")
+    out["block_sweep"] = bench_block_sweep(n_large, 2048, reps)
+    for r in out["block_sweep"]:
+        print(f"block_sweep:W={r['block_events']},"
+              f"{r['events_per_s']:.0f},")
     lanes = bench_lanes(L, n_lane, 64, reps)
     out["lanes"] = lanes
     print(f"lanes:L={L},{lanes['events_per_s_new']:.0f},"
-          f"speedup_vs_pre_pr={lanes['speedup_vs_pre_pr']:.2f}x")
-    out["chunk_sweep"] = bench_chunk_sweep(sweep_n, sweep, 64, reps)
+          f"speedup_vs_xla={lanes['speedup_vs_xla']:.2f}x,"
+          f"vs_pre_pr={lanes['speedup_vs_pre_pr']:.2f}x")
+    # Sweep overheads are ratios of ~0.2 s walls: always take best-of-3,
+    # quick mode included — min-of-2 leaves ±5-point overhead noise.
+    out["chunk_sweep"] = bench_chunk_sweep(sweep_n, sweep, 64,
+                                           max(reps, REPEATS))
     for r in out["chunk_sweep"]:
         tag = r["variant"] if r["chunk_size"] == 0 \
             else f"chunk={r['chunk_size']}"
         extra = "" if r["chunk_size"] == 0 else \
             f"overhead={r['overhead_vs_monolithic_pct']:.1f}%"
         print(f"chunk_sweep:{tag},{r['events_per_s']:.0f},{extra}")
+    # Memory-traffic story of the fused step (analytic, DESIGN.md §10).
+    cfg_large = _blocked(_paper_workload(64, 2048)[0])
+    out["roofline"] = roofline.engine_block_intensity(cfg_large)
+    print(f"roofline:intensity,"
+          f"{out['roofline']['intensity_fused']:.2f},"
+          f"unfused={out['roofline']['intensity_unfused']:.2f},"
+          f"traffic_ratio={out['roofline']['traffic_ratio']:.1f}x")
     print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
@@ -239,8 +338,8 @@ def main(argv=None) -> None:
         json.dump(out, f, indent=1)
     print(f"# wrote {args.out}", file=sys.stderr)
 
-    if head["speedup_vs_pre_pr"] < 1.5:
-        print("# WARNING: single-lane speedup below the 1.5x target",
+    if large["speedup_vs_xla"] < 2.0:
+        print("# WARNING: large-store block speedup below the 2x target",
               file=sys.stderr)
     if args.check and not check_regression(out, args.check):
         sys.exit(1)

@@ -30,13 +30,18 @@ import numpy as np
 from repro.cep import patterns as pat
 from repro.core import overload as ovl
 from repro.core import shedder as shd
+from repro.kernels import block_step as kblock
 from repro.kernels import ops as kops
+from repro.kernels import tiling as ktile
 
 Array = jax.Array
 
 SHED_NONE, SHED_PSPICE, SHED_PMBL, SHED_EBL = "none", "pspice", "pmbl", "ebl"
 
 BACKEND_XLA, BACKEND_PALLAS = "xla", "pallas"
+BACKEND_PALLAS_BLOCK = "pallas_block"
+# Backends whose shed path routes through repro.kernels (DESIGN.md §8/§10).
+_KERNEL_BACKENDS = (BACKEND_PALLAS, BACKEND_PALLAS_BLOCK)
 
 
 # ---------------------------------------------------------------------------
@@ -69,10 +74,18 @@ class EngineConfig:
     # Hot-path dispatch (DESIGN.md §8).  backend: "xla" runs the jnp
     # reference ops; "pallas" routes advance / utility lookup / shed
     # through repro.kernels.ops (compiled on TPU, interpret elsewhere) —
-    # bitwise-equivalent (tests/test_backend.py).  spawn_alloc / shed_plan
-    # keep the legacy O(N log N) paths selectable as oracles and as the
-    # baseline benchmarks/bench_engine.py measures against.
-    backend: str = BACKEND_XLA          # "xla" | "pallas"
+    # bitwise-equivalent (tests/test_backend.py); "pallas_block" replaces
+    # the per-event scan with one fused kernel launch per
+    # ``block_events`` events (kernels/block_step.py, DESIGN.md §10) —
+    # the PM store stays resident across the block, the scan runs over
+    # blocks, and blocks split at Algorithm-1 fire points so the
+    # host-level Algorithm-2 shed path is reused unchanged.  Also
+    # bitwise-equivalent (tests/test_block_backend.py, eval/oracle.py).
+    # spawn_alloc / shed_plan keep the legacy O(N log N) paths selectable
+    # as oracles and as the baseline benchmarks/bench_engine.py measures
+    # against.
+    backend: str = BACKEND_XLA          # "xla" | "pallas" | "pallas_block"
+    block_events: int = 32              # W — events fused per block launch
     spawn_alloc: str = "cumsum"         # "cumsum" (O(N)) | "argsort" (legacy)
     shed_plan: str = "threshold"        # "threshold" (O(N)) | "sort" (legacy)
     # Static pattern census (DESIGN.md §8): when every pattern shares one
@@ -103,6 +116,21 @@ class EngineConfig:
     # sampling degrades toward uniform under pressure): effective priority
     # = floor + (1-floor)·raw.
     ebl_floor: float = 0.25
+
+    def __post_init__(self):
+        # Config-time validation: EngineConfigs are built both by
+        # runner.default_config and by bare dataclasses.replace all over
+        # the benchmarks/tests — a bad knob must fail HERE, not as a
+        # ZeroDivisionError or silent xla fallback deep inside a trace.
+        if self.backend not in (BACKEND_XLA, BACKEND_PALLAS,
+                                BACKEND_PALLAS_BLOCK):
+            raise ValueError(
+                f"unknown engine backend {self.backend!r}; expected one "
+                f"of ('{BACKEND_XLA}', '{BACKEND_PALLAS}', "
+                f"'{BACKEND_PALLAS_BLOCK}')")
+        if self.block_events < 1:
+            raise ValueError(
+                f"block_events must be >= 1: {self.block_events}")
 
     @property
     def flat_pms(self) -> int:
@@ -434,7 +462,7 @@ def _shed_now(cfg: EngineConfig, model: EngineModel, c: Carry, i: Array,
     flat_active = pms.active.reshape(-1)
     key, sub = jax.random.split(c.key)
     if cfg.shedder == SHED_PSPICE:
-        if cfg.backend == BACKEND_PALLAS:
+        if cfg.backend in _KERNEL_BACKENDS:
             # Kernel path: fused per-pattern utility lookup + the same
             # histogram-threshold plan with the Pallas bucket counter.
             interp = kops.default_interpret()
@@ -636,6 +664,168 @@ def _scan_events(cfg: EngineConfig, model: EngineModel, events: EventBatch,
     return jax.lax.scan(step, carry, xs)
 
 
+# ---------------------------------------------------------------------------
+# Event-block execution (backend="pallas_block", DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _pad_event_blocks(events: EventBatch, n: int, w: int,
+                      axis: int = 0) -> tuple[EventBatch, int]:
+    """Pad the event axis to a multiple of ``w`` (masked in-kernel) and
+    reshape it into (nb, w) blocks; returns (blocked events, nb)."""
+    pad = ktile.tile_pad(w, n)
+    nb = max(1, (n + pad) // w)
+    pad = nb * w - n
+
+    def f(x):
+        if pad:
+            widths = [(0, 0)] * x.ndim
+            widths[axis] = (0, pad)
+            x = jnp.pad(x, widths)
+        return x.reshape(x.shape[:axis] + (nb, w) + x.shape[axis + 1:])
+
+    return jax.tree.map(f, events), nb
+
+
+def _run_block(cfg: EngineConfig, model: EngineModel, carry: Carry,
+               blk: tuple, i0: Array, n_valid: Array) -> tuple[Carry, dict]:
+    """One event block through the fused kernel, splitting at shed fire
+    points (DESIGN.md §10).
+
+    The kernel commits events until the Algorithm-1 check fires; the
+    fired event is then replayed through the ordinary ``_step`` — which
+    re-derives the identical overload decision from the committed carry
+    and runs the host-level Algorithm-2 shed — and the kernel re-enters
+    at the next event.  Shedders that never run Algorithm 2 (none, E-BL)
+    need exactly one launch per block.
+    """
+    W = cfg.block_events
+    interp = kops.default_interpret()
+    ev_blk = EventBatch(*blk)
+
+    if cfg.shedder not in (SHED_PSPICE, SHED_PMBL):
+        carry, rows, _, _ = kblock.block_step(
+            cfg, model, carry, ev_blk, i0, 0, n_valid, interpret=interp)
+        return carry, rows
+
+    rows0 = dict(
+        l_e=jnp.zeros((W,), jnp.float32), n_pm=jnp.zeros((W,), jnp.float32),
+        shed=jnp.zeros((W,), bool), dropped=jnp.zeros((W,), bool),
+        match_open=jnp.zeros(
+            (W, cfg.num_patterns, cfg.max_pms if cfg.emit_matches else 0),
+            jnp.int32),
+        match_bind=jnp.zeros(
+            (W, cfg.num_patterns, cfg.max_pms if cfg.emit_matches else 0),
+            jnp.int32))
+    jidx = jnp.arange(W, dtype=jnp.int32)
+
+    def cond(st):
+        return st[0] < n_valid
+
+    def body(st):
+        s, c, rows = st
+        c2, krows, fired, fire_idx = kblock.block_step(
+            cfg, model, c, ev_blk, i0, s, n_valid, interpret=interp)
+        stop = jnp.where(fired, fire_idx, n_valid)
+        mask = (jidx >= s) & (jidx < stop)
+        rows = {k: jnp.where(mask.reshape((W,) + (1,) * (v.ndim - 1)),
+                             krows[k], v) for k, v in rows.items()}
+
+        def on_fire(args):
+            c3, rows3 = args
+            j = fire_idx
+            ev = tuple(jax.lax.dynamic_index_in_dim(x, j, keepdims=False)
+                       for x in (jidx,) + blk)
+            ev = (i0 + ev[0],) + ev[1:]
+            c3, row = _step(cfg, model, c3, ev)
+            row_d = dict(l_e=row.l_e, n_pm=row.n_pm, shed=row.shed,
+                         dropped=row.dropped, match_open=row.match_open,
+                         match_bind=row.match_bind)
+            rows3 = {k: v.at[j].set(row_d[k]) for k, v in rows3.items()}
+            return c3, rows3
+
+        c2, rows = jax.lax.cond(fired, on_fire, lambda a: a, (c2, rows))
+        return (jnp.where(fired, fire_idx + 1, n_valid), c2, rows)
+
+    _, carry, rows = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), carry, rows0))
+    return carry, rows
+
+
+def _scan_event_blocks(cfg: EngineConfig, model: EngineModel,
+                       events: EventBatch, carry: Carry,
+                       start: Array) -> tuple[Carry, StepOut]:
+    """``_scan_events`` with the per-event step fused into one kernel
+    launch per ``cfg.block_events`` events: the outer scan runs over
+    event BLOCKS, and each block's W events execute inside
+    ``kernels.block_step`` with the PM store resident.  Event indices
+    stay global, so monolithic, chunked and blocked execution all replay
+    the identical op sequence (bit-for-bit with backend="xla")."""
+    n = events.ev_class.shape[0]
+    W = cfg.block_events
+    blocks, nb = _pad_event_blocks(events, n, W)
+    offs = jnp.arange(nb, dtype=jnp.int32) * W
+
+    def body(c, xs):
+        blk, off = xs
+        n_valid = jnp.clip(jnp.int32(n) - off, 0, W)
+        return _run_block(cfg, model, c, tuple(blk), jnp.int32(start) + off,
+                          n_valid)
+
+    carry, rows = jax.lax.scan(body, carry, (blocks, offs))
+    outs = StepOut(**{k: v.reshape((nb * W,) + v.shape[2:])[:n]
+                      for k, v in rows.items()})
+    return carry, outs
+
+
+def _scan_event_blocks_lanes(cfg: EngineConfig, model: EngineModel,
+                             events: EventBatch, carry: Carry,
+                             start: Array) -> tuple[Carry, StepOut]:
+    """Lane-batched ``_scan_event_blocks``: the fused kernel vmaps over
+    the lane axis (lanes are independent operators — per-lane results
+    are bitwise those of the single-lane block scan, which equals the
+    per-event engine).  Fire handling composes with vmap: the while loop
+    runs until every lane committed its block, and the replayed
+    ``_step`` commits only on lanes whose own check fired."""
+    L, n = events.ev_class.shape[0], events.ev_class.shape[1]
+    W = cfg.block_events
+    blocks, nb = _pad_event_blocks(events, n, W, axis=1)
+    blocks = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), blocks)
+    offs = jnp.arange(nb, dtype=jnp.int32) * W
+
+    def body(c, xs):
+        blk, off = xs
+        n_valid = jnp.clip(jnp.int32(n) - off, 0, W)
+        i0 = jnp.int32(start) + off
+        run = lambda m, cc, b: _run_block(   # noqa: E731
+            cfg, m, cc, tuple(b), i0, n_valid)
+        return jax.vmap(run)(model, c, blk)
+
+    carry, rows = jax.lax.scan(body, carry, (blocks, offs))
+    outs = StepOut(**{
+        k: jnp.moveaxis(v, 0, 1).reshape((L, nb * W) + v.shape[3:])[:, :n]
+        for k, v in rows.items()})
+    return carry, outs
+
+
+def _scan_events_backend(cfg: EngineConfig, model: EngineModel,
+                         events: EventBatch, carry: Carry,
+                         start: Array) -> tuple[Carry, StepOut]:
+    """Backend dispatch for every event-scan entry point (run_engine,
+    run_engine_chunk, the runtime's group runners)."""
+    if cfg.backend == BACKEND_PALLAS_BLOCK:
+        return _scan_event_blocks(cfg, model, events, carry, start)
+    return _scan_events(cfg, model, events, carry, start)
+
+
+def _scan_events_lanes_backend(cfg: EngineConfig, model: EngineModel,
+                               events: EventBatch, carry: Carry,
+                               start: Array) -> tuple[Carry, StepOut]:
+    """Lane-batched backend dispatch (runtime lanes + sharded lanes)."""
+    if cfg.backend == BACKEND_PALLAS_BLOCK:
+        return _scan_event_blocks_lanes(cfg, model, events, carry, start)
+    return _scan_events_lanes(cfg, model, events, carry, start)
+
+
 def _step_lanes(cfg: EngineConfig, model: EngineModel, carry: Carry,
                 ev: tuple) -> tuple[Carry, StepOut]:
     """Lane-batched event step for the multi-tenant runtime (DESIGN.md §7).
@@ -699,7 +889,7 @@ def _scan_events_lanes(cfg: EngineConfig, model: EngineModel,
 def run_engine(cfg: EngineConfig, model: EngineModel, events: EventBatch,
                carry: Carry) -> tuple[Carry, StepOut]:
     """Run the operator over a whole event stream (one lax.scan)."""
-    return _scan_events(cfg, model, events, carry, jnp.int32(0))
+    return _scan_events_backend(cfg, model, events, carry, jnp.int32(0))
 
 
 def wrap_event_index(start) -> Array:
@@ -732,7 +922,7 @@ def run_engine_chunk(cfg: EngineConfig, model: EngineModel,
     allocations.  ``start`` is a traced scalar, so every same-length
     chunk hits one compiled executable — zero retraces while streaming.
     """
-    return _scan_events(cfg, model, events, carry, start)
+    return _scan_events_backend(cfg, model, events, carry, start)
 
 
 def merge_carries(stacked: Carry, axis: int = 0) -> Carry:
@@ -751,9 +941,18 @@ def merge_carries(stacked: Carry, axis: int = 0) -> Carry:
         return x.reshape((-1,) + x.shape[2:])
 
     pms = PMStore(*[_flat(x) for x in stacked.pms])
-    mx = lambda x: x.max(axis=axis)          # noqa: E731
-    sm = lambda x: x.sum(axis=axis)          # noqa: E731
-    first = lambda x: jnp.take(x, 0, axis=axis)  # noqa: E731
+    if jax.tree.leaves(stacked)[0].shape[axis] == 0:
+        # Zero-lane merge: the flattened pattern state is (0, ...) and
+        # every folded scalar takes its reduction identity (max over no
+        # lanes = the zero clock) instead of tripping the empty-axis
+        # reduction error.
+        zero = lambda x: jnp.zeros(                      # noqa: E731
+            x.shape[:axis] + x.shape[axis + 1:], x.dtype)
+        mx = sm = first = zero
+    else:
+        mx = lambda x: x.max(axis=axis)          # noqa: E731
+        sm = lambda x: x.sum(axis=axis)          # noqa: E731
+        first = lambda x: jnp.take(x, 0, axis=axis)  # noqa: E731
     return Carry(
         pms=pms, ring=_flat(stacked.ring), ring_ptr=_flat(stacked.ring_ptr),
         sim_time=mx(stacked.sim_time), key=first(stacked.key),

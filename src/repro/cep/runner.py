@@ -41,6 +41,16 @@ class BuiltModel:
 
 
 def default_config(cp: pat.CompiledPatterns, **kw) -> eng.EngineConfig:
+    """Engine config with the static pattern census filled in.
+
+    ``backend`` selects the hot-path implementation (DESIGN.md §8/§10):
+    the jnp reference scan, the per-event Pallas kernels, or the
+    event-block megakernel (``backend="pallas_block"`` with
+    ``block_events=W`` fused per launch) — all bitwise-equivalent, so
+    experiments may pick purely on speed.  Unknown backends / bad block
+    sizes fail at config-build time (``EngineConfig.__post_init__``),
+    never as a silent xla-path fallback mid-experiment.
+    """
     kind, sm = np.asarray(cp.kind), np.asarray(cp.spawn_mode)
     base = dict(
         num_patterns=cp.num_patterns,

@@ -103,6 +103,29 @@ def invert_latency(model: LatencyModel, l_target: Array) -> Array:
     return jnp.where(model.kind == LINEAR, t, n_nlogn)
 
 
+def invert_latency_lazy(model: LatencyModel, l_target: Array) -> Array:
+    """``invert_latency`` with the Newton iteration under a ``lax.cond``:
+    bit-identical results (each branch is the exact expression the
+    ``jnp.where`` in ``invert_latency`` selects), but a LINEAR model pays
+    only the closed-form inverse at runtime.  The per-event Algorithm-1
+    check inside the block-step kernel (kernels/block_step.py) uses this
+    — under vmap (tenant lanes) the cond lowers back to a select, which
+    is exactly ``invert_latency``'s cost."""
+    t = jnp.maximum((l_target - model.b) / model.a, 0.0)
+
+    def newton_path(t):
+        def newton(n, _):
+            fn = n * jnp.log2(n + 1.0) - t
+            dfn = jnp.log2(n + 1.0) + n / ((n + 1.0) * jnp.log(2.0))
+            n = jnp.clip(n - fn / jnp.maximum(dfn, 1e-9), 0.0, 1e12)
+            return n, None
+
+        n, _ = jax.lax.scan(newton, jnp.maximum(t, 1.0), None, length=16)
+        return n
+
+    return jax.lax.cond(model.kind == LINEAR, lambda t: t, newton_path, t)
+
+
 @dataclasses.dataclass
 class OverloadDecision:
     shed: Array   # bool — does l_e + l_s (+ b_s) exceed LB?
@@ -119,10 +142,14 @@ jax.tree_util.register_pytree_node(
 
 def detect_overload(f_model: LatencyModel, g_model: LatencyModel,
                     l_q: Array, n_pm: Array, latency_bound: float,
-                    safety_buffer: float = 0.0) -> OverloadDecision:
+                    safety_buffer: float = 0.0,
+                    lazy: bool = False) -> OverloadDecision:
     """Algorithm 1: decide whether to shed and how many PMs to drop.
 
     l'_p = LB - l_q - l_s;  n'_pm = f^{-1}(l'_p);  rho = n_pm - n'_pm.
+    ``lazy`` routes the inversion through ``invert_latency_lazy`` — the
+    same bits, but the Newton path only executes for NLOGN models (the
+    block-step kernel runs this check once per event, in-loop).
     """
     n_pm_f = n_pm.astype(jnp.float32)
     l_p = predict_latency(f_model, n_pm_f)
@@ -130,9 +157,9 @@ def detect_overload(f_model: LatencyModel, g_model: LatencyModel,
     l_e = l_q + l_p
     shed = l_e + l_s + safety_buffer > latency_bound
     l_p_new = jnp.maximum(latency_bound - l_q - l_s - safety_buffer, 0.0)
+    invert = invert_latency_lazy if lazy else invert_latency
     # +eps guards float32 round-down at exact solutions (n' must not be
     # under-counted by one — that would over-shed every call).
-    n_keep = jnp.floor(invert_latency(f_model, l_p_new)
-                       + 1e-4).astype(jnp.int32)
+    n_keep = jnp.floor(invert(f_model, l_p_new) + 1e-4).astype(jnp.int32)
     rho = jnp.where(shed, jnp.maximum(n_pm - n_keep, 0), 0).astype(jnp.int32)
     return OverloadDecision(shed=shed, rho=rho, l_e=l_e)

@@ -307,6 +307,14 @@ def pm_specs(mesh, cfg, axis: str = "data") -> dict:
 
     Returns {"carry", "model", "events", "out", "pattern_axis"} where the
     first four mirror Carry / EngineModel / EventBatch / StepOut.
+
+    The specs cover every engine backend, including the event-block
+    megakernel (``backend="pallas_block"``, DESIGN.md §10): its driver
+    pads/blocks the event axis and slices StepOut back INSIDE the
+    shard-mapped computation, so the block outputs cross the shard
+    boundary with the exact per-event shapes specced here, and the
+    pattern-axis entries apply to the shard-local (P/shards, N) store
+    the kernel keeps resident.
     """
     from repro.cep import engine as eng
     from repro.core import overload as ovl
@@ -484,8 +492,9 @@ def _lanes_sharded_fn(cfg, mesh, num_lanes: int, lane_axis: str,
         cfg, num_patterns=cfg.num_patterns // _axis_size(mesh, (pax,)))
 
     def local_run(model, events, carry, start):
-        new_c, outs = eng._scan_events_lanes(local_cfg, model, events,
-                                             carry, start[0])
+        new_c, outs = eng._scan_events_lanes_backend(local_cfg, model,
+                                                     events, carry,
+                                                     start[0])
         if pax is not None:
             new_c, outs = _merge_pattern_shards(new_c, outs, pax)
         return new_c, outs

@@ -1,0 +1,506 @@
+"""Store-resident event-block megakernel (DESIGN.md §10).
+
+One ``pl.pallas_call`` advances the engine through a BLOCK of
+``W = cfg.block_events`` events: the PM store, window ring, overload
+scalars and per-pattern counters stay resident (VMEM on TPU) for the
+whole block while an in-kernel ``fori_loop`` replays the paper's
+per-event operator — expire → Algorithm-1 overload check → E-BL drop →
+advance → complete → spawn → observation gather → simulated time — and
+writes one ``StepOut`` row per event into output tiles.  This is the
+IO-aware tiling trick of ``kernels/flash_attention.py`` applied to the
+CEP hot loop: the per-event jnp step streams the whole (P, N) store
+through HBM ~6 times per event; here it is loaded once per W events.
+
+Shedding protocol (block split, DESIGN.md §10): Algorithm 2 never runs
+in-kernel.  The loop evaluates the Algorithm-1 decision with TENTATIVE
+pre-shed values (window expiry applied to locals only) and, at the first
+event where ``shed ∧ ρ>0``, stops committing and reports ``(fired,
+fire_idx)``.  The engine driver (``engine._scan_event_blocks``) then
+replays that one event through the ordinary ``_step`` — which re-derives
+the identical decision from the committed carry, splits the PRNG key and
+runs the host-level Algorithm-2 path — and re-enters the kernel at
+``fire_idx + 1``.  Every committed quantity therefore goes through
+arithmetic bit-identical to the xla backend's (same reduction shapes and
+orders; the one-hot advance touches exactly one nonzero per row), which
+is what lets tests/test_block_backend.py and the eval/oracle.py suite
+demand EXACT equality.
+
+Slot allocation matches the engine's free-list compaction without its
+full-store scatter: candidate r takes the (r+1)-th lowest-index inactive
+slot, found as ``argmax(cumsum(~active) == r+1)`` — one pass per
+candidate instead of an N-sized scatter (and a single ``argmax(~active)``
+when the census proves only AT_OPEN spawns exist).
+
+TARGET: TPU (grid=(), every operand one VMEM-resident block).
+VALIDATED: interpret=True vs the xla engine (tests/test_block_backend.py)
+and the NumPy oracle (tests/test_oracle.py).  The ``gather_stats``
+variant updates the (P, M, M) observation matrices with the engine's
+exact scatter-add; Mosaic support for in-kernel scatter is limited, so
+stats-gathering (warm-up only, never the hot path) should keep
+``interpret=True`` off-CPU too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.cep import patterns as pat
+from repro.core import overload as ovl
+
+SHED_PSPICE, SHED_PMBL, SHED_EBL = "pspice", "pmbl", "ebl"
+
+
+def _block_kernel(*refs, spec):
+    """Kernel body: unpacks refs positionally (mirror of the wrapper's
+    operand assembly), loads the resident state once, loops over the W
+    events, writes the state + per-event rows back."""
+    (P, N, M, A, K, S, W) = (spec["P"], spec["N"], spec["M"], spec["A"],
+                             spec["K"], spec["S"], spec["W"])
+    kinds, spawn_modes = spec["kinds"], spec["spawn_modes"]
+    shedder, emit, stats = spec["shedder"], spec["emit"], spec["stats"]
+    f32, i32 = jnp.float32, jnp.int32
+
+    it = iter(refs)
+    nxt = lambda: next(it)                                   # noqa: E731
+    (tcols_ref, evc_ref, evb_ref, evo_ref, evid_ref, evr_ref, eraw_ref,
+     arr_ref, iscal_ref, fscal_ref) = (nxt() for _ in range(10))
+    (act_ref, st_ref, oi_ref, bd_ref, ids_ref, ring_ref, rp_ref) = (
+        nxt() for _ in range(7))
+    (ws_ref, fin_ref, ub_ref, kind_ref, sm_ref, sc_ref, pc_ref) = (
+        nxt() for _ in range(7))
+    cplx_ref, crtd_ref, latn_ref, latl_ref = (nxt() for _ in range(4))
+    if stats:
+        obsc_ref, obsr_ref = nxt(), nxt()
+    # outputs
+    (oact_ref, ost_ref, ooi_ref, obd_ref, oids_ref, oring_ref, orp_ref,
+     ocplx_ref, ocrtd_ref, olatn_ref, olatl_ref) = (nxt() for _ in range(11))
+    ofscal_ref, oiscal_ref = nxt(), nxt()
+    ole_ref, onpm_ref, oshed_ref, odrop_ref = (nxt() for _ in range(4))
+    if emit:
+        omo_ref, omb_ref = nxt(), nxt()
+    if stats:
+        oobsc_ref, oobsr_ref = nxt(), nxt()
+
+    iscal = iscal_ref[...]
+    s, n_valid, i0, lat_ptr0 = iscal[0], iscal[1], iscal[2], iscal[3]
+    fscal = fscal_ref[...]
+    f_model = ovl.LatencyModel(a=fscal[6], b=fscal[7], kind=iscal[4])
+    g_model = ovl.LatencyModel(a=fscal[8], b=fscal[9], kind=iscal[5])
+    ebl_raw_mean = fscal[10]
+
+    wsz = ws_ref[...][:, None]                # (P, 1) window sizes
+    final = fin_ref[...][:, None]             # (P, 1)
+    usesb = ub_ref[...] > 0                   # (P,)
+    kindv, smode = kind_ref[...], sm_ref[...]
+    scount, proc = sc_ref[...], pc_ref[...]
+    at_open_m = smode == pat.SPAWN_AT_OPEN
+    is_seq = (kindv == pat.KIND_SEQ)[:, None]
+    pidx = jax.lax.broadcasted_iota(i32, (P, 1), 0)[:, 0]   # (P,)
+
+    def row_i32(ref, j):
+        return pl.load(ref, (pl.dslice(j, 1), slice(None)))[0]
+
+    def body(st):
+        j, carry = st
+        (active, state, open_idx, bind, idset, ring, ring_ptr, n_act,
+         sim, ema, prev, eblf, cplx, crtd, ovf, ebld, lat_n, lat_l,
+         lat_ptr, obs_c, obs_r, fired, fire_idx) = carry
+        i = i0 + j
+        ec = row_i32(evc_ref, j)                            # (P,)
+        eb = row_i32(evb_ref, j)
+        eo = row_i32(evo_ref, j) > 0
+        eid = pl.load(evid_ref, (pl.dslice(j, 1),))[0]
+        er = pl.load(evr_ref, (pl.dslice(j, 1),))[0]
+        eraw = pl.load(eraw_ref, (pl.dslice(j, 1),))[0]
+        arr = pl.load(arr_ref, (pl.dslice(j, 1),))[0]
+        pred = (j >= s) & (j < n_valid) & ~fired
+
+        # -- 1-2. tentative pre-shed: expiry, queueing, Algorithm 1 -------
+        expired_t = active & ((i - open_idx) >= wsz)
+        n_exp = jnp.sum(expired_t, axis=1, dtype=i32)
+        n_act1 = n_act - n_exp
+        sim1 = jnp.maximum(sim, arr)
+        l_q = sim1 - arr
+        n_pm_i = n_act1.sum()
+        n_pm_f = n_pm_i.astype(f32)
+
+        fire_j = jnp.bool_(False)
+        if shedder in (SHED_PSPICE, SHED_PMBL):
+            dec = ovl.detect_overload(f_model, g_model, l_q, n_pm_i,
+                                      spec["latency_bound"],
+                                      spec["safety_buffer"], lazy=True)
+            fire_j = pred & dec.shed & (dec.rho > 0)
+        commit = pred & ~fire_j
+        fired2 = fired | fire_j
+        fire_idx2 = jnp.where(fire_j, j, fire_idx)
+
+        # -- committed pre-shed state ------------------------------------
+        active1 = active & ~(expired_t & commit)
+        n_act1 = jnp.where(commit, n_act1, n_act)
+        if spawn_modes != "at_open":
+            opens = eo & (smode == pat.SPAWN_IN_WINDOWS) & commit
+            ring = jnp.where(
+                opens[:, None] &
+                (jax.lax.broadcasted_iota(i32, (P, K), 1)
+                 == ring_ptr[:, None]), i, ring)
+            ring_ptr = jnp.where(opens, (ring_ptr + 1) % K, ring_ptr)
+        sim1 = jnp.where(commit, sim1, sim)
+
+        # -- 3. E-BL drop + inter-arrival EMA ----------------------------
+        gap = jnp.maximum(arr - prev, 1e-9)
+        ema1 = 0.99 * ema + 0.01 * gap
+        ema = jnp.where(commit, ema1, ema)
+        prev = jnp.where(commit, arr, prev)
+        dropped_e = jnp.bool_(False)
+        did_shed_row = fire_j
+        if shedder == SHED_EBL:
+            dec_e = ovl.detect_overload(f_model, g_model, l_q, n_pm_i,
+                                        spec["latency_bound"],
+                                        spec["safety_buffer"], lazy=True)
+            l_p_est = ovl.predict_latency(f_model, n_pm_f)
+            d_ff = (l_p_est - ema1) / jnp.maximum(
+                l_p_est - spec["c_ebl"], 1e-9)
+            d_bk = spec["ebl_backlog_gain"] * l_q / spec["latency_bound"]
+            d_need = jnp.clip(d_ff + d_bk, 0.0, 1.0)
+            eblf1 = jnp.where(dec_e.shed,
+                              jnp.maximum(eblf * spec["ebl_decay"], d_need),
+                              eblf * spec["ebl_decay"])
+            raw_eff = spec["ebl_floor"] + (1.0 - spec["ebl_floor"]) * eraw
+            mean_eff = (spec["ebl_floor"] +
+                        (1.0 - spec["ebl_floor"]) * ebl_raw_mean)
+            p_drop = jnp.clip(raw_eff * eblf1 /
+                              jnp.maximum(mean_eff, 1e-9), 0.0, 1.0)
+            dropped_e = er < p_drop
+            eblf = jnp.where(commit, eblf1, eblf)
+            ebld = ebld + jnp.where(commit & dropped_e, 1.0, 0.0)
+            did_shed_row = dec_e.shed
+        lc = jnp.where(dropped_e, 0, ec)                    # live class
+        lo = eo & ~dropped_e
+
+        # -- 4. advance + completions ------------------------------------
+        bind_ok = jnp.where(usesb[:, None], bind == eb[:, None], True)
+        if kinds != "any":
+            tcol = pl.load(
+                tcols_ref,
+                (pl.dslice(j, 1), slice(None), slice(None)))[0]  # (P, M)
+            if spec["mxu"]:
+                # TPU: data-dependent lookup as a one-hot MXU matmul
+                # (exactly one nonzero per row ⇒ exact integers).
+                oh = (state[:, :, None] == jax.lax.broadcasted_iota(
+                    i32, (P, N, M), 2)).astype(f32)
+                looked = jnp.round(
+                    (oh * tcol[:, None, :]).sum(axis=-1)).astype(i32)
+            else:
+                # Interpret mode lowers to XLA anyway — a plain gather
+                # is the same exact lookup without the (P, N, M) one-hot.
+                looked = jnp.take_along_axis(
+                    tcol.astype(i32), state, axis=1)
+            seq_next = jnp.where(bind_ok & ~dropped_e, looked, state)
+        if kinds != "seq":
+            in_set = (idset == eid).any(axis=-1)
+            any_match = (bind_ok & (lc[:, None] == 1) & ~in_set &
+                         (state < final))
+            any_next = state + any_match.astype(i32)
+            slot_ins = jnp.clip(state - 1 + scount[:, None], 0, A - 1)
+            do_ins = (~is_seq) & active1 & any_match & commit
+            oh_ins = ((slot_ins[:, :, None] ==
+                       jax.lax.broadcasted_iota(i32, (P, N, A), 2)) &
+                      do_ins[..., None])
+            idset = jnp.where(oh_ins, eid, idset)
+        if kinds == "seq":
+            nxt_state = seq_next
+        elif kinds == "any":
+            nxt_state = any_next
+        else:
+            nxt_state = jnp.where(is_seq, seq_next, any_next)
+        new_state = jnp.where(active1 & commit, nxt_state, state)
+        completed = (active1 & (nxt_state == final) & (state != final) &
+                     commit)
+        ncomp = jnp.sum(completed, axis=1, dtype=i32)
+        active2 = active1 & ~completed
+        n_act2 = n_act1 - ncomp
+        cplx = cplx + ncomp.astype(f32)
+        if emit:
+            pl.store(omo_ref, (pl.dslice(j, 1), slice(None), slice(None)),
+                     jnp.where(completed, open_idx, -1)[None])
+            pl.store(omb_ref, (pl.dslice(j, 1), slice(None), slice(None)),
+                     jnp.where(completed, bind, -1)[None])
+
+        # -- 6. observations (model-building phase only) ------------------
+        if stats:
+            w = (active1 & commit).astype(f32)
+            t_obs = (spec["c_match"] * proc)[:, None] * w
+            flat_obs = ((pidx[:, None] * M + state) * M +
+                        new_state).reshape(-1)
+            obs_c = obs_c.reshape(-1).at[flat_obs].add(
+                w.reshape(-1)).reshape(P, M, M)
+            obs_r = obs_r.reshape(-1).at[flat_obs].add(
+                t_obs.reshape(-1)).reshape(P, M, M)
+
+        # -- 5. spawn ----------------------------------------------------
+        n_free = N - n_act2                                  # (P,)
+        if spawn_modes == "at_open":
+            # Census: every pattern spawns AT_OPEN — one candidate, and
+            # the engine's rank-0 free-list pick IS the first free slot.
+            cand1 = lo & commit
+            can1 = cand1 & (n_free > 0)
+            ovf = ovf + jnp.sum(cand1 & ~can1, dtype=i32).astype(f32)
+            slot1 = jnp.argmax(~active2, axis=1).astype(i32)
+            flat = jnp.where(can1, pidx * N + slot1, P * N)
+            spawn_open = jnp.broadcast_to(i, (P,)).astype(i32)
+            spawn_bind = eb
+            spawned = can1.astype(i32)
+            fresh = None
+        else:
+            ring_valid = ring >= 0
+            in_window = (i - ring) < wsz
+            exists = ((active2[:, None, :]) &
+                      (open_idx[:, None, :] == ring[:, :, None]) &
+                      (bind[:, None, :] == eb[:, None, None])).any(-1)
+            win_spawn = (ring_valid & in_window & ~exists &
+                         (lc == 1)[:, None] & (~at_open_m)[:, None])
+            kiota = jax.lax.broadcasted_iota(i32, (1, K), 1)
+            open_spawn = (at_open_m & lo)[:, None] & (kiota == 0)
+            if spawn_modes == "in_windows":
+                cand = win_spawn & commit
+                cand_open = ring
+            else:
+                cand = (win_spawn | open_spawn) & commit
+                cand_open = jnp.where(at_open_m[:, None], i, ring)
+            rank = jnp.cumsum(cand, axis=1) - 1              # (P, K)
+            can = cand & (rank < n_free[:, None])
+            ovf = ovf + jnp.sum(cand & ~can, dtype=i32).astype(f32)
+            # Candidate k takes the (rank[k]+1)-th lowest inactive slot
+            # == first index where the running free count reaches
+            # rank[k]+1 — same pick as the engine's masked-cumsum
+            # scatter, without the N-sized scatter.
+            frank = jnp.cumsum(~active2, axis=1)             # (P, N)
+            hits = frank[:, None, :] == (rank[:, :, None] + 1)
+            slots = jnp.argmax(hits, axis=-1).astype(i32)    # (P, K)
+            flat = jnp.where(can, pidx[:, None] * N + slots,
+                             P * N).reshape(-1)
+            spawn_open = cand_open.reshape(-1)
+            spawn_bind = jnp.broadcast_to(eb[:, None], (P, K)).reshape(-1)
+            spawned = jnp.sum(can, axis=1, dtype=i32)
+            if kinds != "seq":
+                row0 = jnp.where(scount[:, None] > 0, eid, -1)  # (P, 1)
+                fresh1 = jnp.concatenate(
+                    [row0, jnp.full((P, A - 1), -1, i32)], axis=1)
+                fresh = jnp.broadcast_to(
+                    fresh1[:, None, :], (P, K, A)).reshape(-1, A)
+            else:
+                fresh = None
+        if spawn_modes == "at_open" and kinds != "seq":
+            fresh = jnp.where(scount[:, None] > 0,
+                              jnp.full((P, 1), eid, i32), -1)
+            fresh = jnp.concatenate(
+                [fresh, jnp.full((P, A - 1), -1, i32)], axis=1)
+        active3 = active2.reshape(-1).at[flat].set(
+            True, mode="drop").reshape(P, N)
+        state3 = new_state.reshape(-1).at[flat].set(
+            1, mode="drop").reshape(P, N)
+        open3 = open_idx.reshape(-1).at[flat].set(
+            spawn_open, mode="drop").reshape(P, N)
+        bind3 = bind.reshape(-1).at[flat].set(
+            spawn_bind, mode="drop").reshape(P, N)
+        if kinds != "seq":
+            idset = idset.reshape(P * N, A).at[flat].set(
+                fresh, mode="drop").reshape(P, N, A)
+        crtd = crtd + spawned.astype(f32)
+        n_act3 = n_act2 + spawned
+
+        # -- 7. simulated processing time & latency ----------------------
+        n_active_p = n_act1.astype(f32)
+        t_proc = spec["c_base"] + (spec["c_match"] * proc *
+                                   n_active_p).sum()
+        t_proc = jnp.where(dropped_e, spec["c_ebl"], t_proc)
+        sim2 = sim1 + t_proc
+        l_e = sim2 - arr
+        sim = jnp.where(commit, sim2, sim)
+        ptr = lat_ptr % S
+        lat_n = lat_n.at[ptr].set(jnp.where(commit, n_pm_f, lat_n[ptr]))
+        lat_l = lat_l.at[ptr].set(jnp.where(commit, t_proc, lat_l[ptr]))
+        lat_ptr = lat_ptr + jnp.where(commit, 1, 0).astype(i32)
+
+        pl.store(ole_ref, (pl.dslice(j, 1),), l_e[None])
+        pl.store(onpm_ref, (pl.dslice(j, 1),),
+                 n_act3.sum().astype(f32)[None])
+        pl.store(oshed_ref, (pl.dslice(j, 1),),
+                 did_shed_row.astype(i32)[None])
+        pl.store(odrop_ref, (pl.dslice(j, 1),),
+                 dropped_e.astype(i32)[None])
+        return j + 1, (active3, state3, open3, bind3, idset, ring,
+                       ring_ptr, n_act3, sim, ema, prev, eblf, cplx,
+                       crtd, ovf, ebld, lat_n, lat_l, lat_ptr, obs_c,
+                       obs_r, fired2, fire_idx2)
+
+    active0 = act_ref[...] != 0
+    obs0 = (obsc_ref[...], obsr_ref[...]) if stats else (
+        jnp.zeros((), f32), jnp.zeros((), f32))
+    carry0 = (active0, st_ref[...], oi_ref[...], bd_ref[...], ids_ref[...],
+              ring_ref[...], rp_ref[...],
+              jnp.sum(active0, axis=1, dtype=jnp.int32),
+              fscal[0], fscal[2], fscal[3], fscal[1],
+              cplx_ref[...], crtd_ref[...], fscal[4], fscal[5],
+              latn_ref[...], latl_ref[...], lat_ptr0,
+              obs0[0], obs0[1], jnp.bool_(False), jnp.int32(W))
+    # Early-exit event loop: start at the re-entry offset s (events
+    # before it were committed by a previous launch) and stop at the
+    # first Algorithm-1 fire or the ragged-tail boundary — a block with
+    # F fires costs O(committed events) total across its F+1 launches,
+    # not F+1 full W-iteration replays.  Rows outside the committed
+    # range stay unwritten; the driver only reads [s, stop).
+    out = jax.lax.while_loop(
+        lambda st: (st[0] < n_valid) & ~st[1][21],
+        body, (s, carry0))[1]
+    (active, state, open_idx, bind, idset, ring, ring_ptr, _n_act, sim,
+     ema, prev, eblf, cplx, crtd, ovf, ebld, lat_n, lat_l, lat_ptr,
+     obs_c, obs_r, fired, fire_idx) = out
+    oact_ref[...] = active.astype(jnp.int32)
+    ost_ref[...] = state
+    ooi_ref[...] = open_idx
+    obd_ref[...] = bind
+    oids_ref[...] = idset
+    oring_ref[...] = ring
+    orp_ref[...] = ring_ptr
+    ocplx_ref[...] = cplx
+    ocrtd_ref[...] = crtd
+    olatn_ref[...] = lat_n
+    olatl_ref[...] = lat_l
+    ofscal_ref[...] = jnp.stack([sim, eblf, ema, prev, ovf, ebld])
+    oiscal_ref[...] = jnp.stack([fired.astype(jnp.int32), fire_idx,
+                                 lat_ptr])
+    if stats:
+        oobsc_ref[...] = obs_c
+        oobsr_ref[...] = obs_r
+
+
+def block_step(cfg, model, carry, blk, i0, s, n_valid, *,
+               interpret: bool = True):
+    """Run the fused block step: ``W = cfg.block_events`` events against
+    the resident carry, starting at in-block offset ``s`` (events before
+    ``s`` were committed by a previous entry — the block-split protocol),
+    masking events at ``>= n_valid`` (ragged tail blocks).
+
+    ``cfg`` / ``model`` / ``carry`` / ``blk`` are the engine's
+    ``EngineConfig`` / ``EngineModel`` / ``Carry`` / block-shaped
+    ``EventBatch`` (duck-typed; this module never imports the engine).
+    Returns ``(carry', rows, fired, fire_idx)`` where ``rows`` is a dict
+    of per-event StepOut columns — valid on ``[s, stop)`` with
+    ``stop = fire_idx if fired else n_valid`` — and ``carry'`` has every
+    event in ``[s, stop)`` committed, bit-identical to the xla step.
+    """
+    P, N, M = cfg.num_patterns, cfg.max_pms, cfg.max_states
+    A, K, W = cfg.max_any_ids, cfg.ring_size, cfg.block_events
+    S = carry.lat_samples_n.shape[0]
+    i32, f32 = jnp.int32, jnp.float32
+    spec = dict(P=P, N=N, M=M, A=A, K=K, S=S, W=W, mxu=not interpret,
+                kinds=cfg.kinds, spawn_modes=cfg.spawn_modes,
+                shedder=cfg.shedder, emit=cfg.emit_matches,
+                stats=cfg.gather_stats,
+                c_base=cfg.c_base, c_match=cfg.c_match, c_ebl=cfg.c_ebl,
+                latency_bound=cfg.latency_bound,
+                safety_buffer=cfg.safety_buffer,
+                ebl_backlog_gain=cfg.ebl_backlog_gain,
+                ebl_decay=cfg.ebl_decay, ebl_floor=cfg.ebl_floor)
+
+    # Per-event SEQ transition columns, gathered OUTSIDE the kernel
+    # (tiny: (W, P, M)); class 0 self-loops cover bind-fail / E-BL drop.
+    tt = jnp.transpose(model.trans, (0, 2, 1))               # (P, C+1, M)
+    tcols = tt[jnp.arange(P, dtype=i32)[None, :],
+               blk.ev_class].astype(f32)                     # (W, P, M)
+    pms = carry.pms
+    iscal = jnp.stack([jnp.asarray(s, i32), jnp.asarray(n_valid, i32),
+                       jnp.asarray(i0, i32), carry.lat_ptr,
+                       model.f_model.kind, model.g_model.kind])
+    fscal = jnp.stack([carry.sim_time, carry.ebl_frac, carry.ema_gap,
+                       carry.prev_arrival, carry.overflow,
+                       carry.ebl_dropped, model.f_model.a, model.f_model.b,
+                       model.g_model.a, model.g_model.b,
+                       model.ebl_raw_mean])
+    # Named operand assembly: the kernel unpacks refs positionally in
+    # this exact order (the ``nxt()`` sequence in ``_block_kernel``);
+    # the in-place alias map is derived BY NAME below, so adding an
+    # operand cannot silently shift an alias pair.
+    inputs = [("tcols", tcols), ("ev_class", blk.ev_class),
+              ("ev_bind", blk.ev_bind),
+              ("ev_open", blk.ev_open.astype(i32)),
+              ("ev_id", blk.ev_id), ("ev_rand", blk.ev_rand),
+              ("ebl_raw", blk.ebl_raw), ("arrival", blk.arrival),
+              ("iscal", iscal), ("fscal", fscal),
+              ("active", pms.active.astype(i32)), ("state", pms.state),
+              ("open_idx", pms.open_idx), ("bind", pms.bind),
+              ("idset", pms.idset), ("ring", carry.ring),
+              ("ring_ptr", carry.ring_ptr),
+              ("window_size", model.window_size),
+              ("final_state", model.final_state),
+              ("uses_binding", model.uses_binding.astype(i32)),
+              ("kind", model.kind), ("spawn_mode", model.spawn_mode),
+              ("spawn_counts", model.spawn_counts.astype(i32)),
+              ("proc_cost", model.proc_cost),
+              ("complex_count", carry.complex_count),
+              ("pms_created", carry.pms_created),
+              ("lat_n", carry.lat_samples_n),
+              ("lat_l", carry.lat_samples_l)]
+    if cfg.gather_stats:
+        inputs += [("obs_counts", carry.obs_counts),
+                   ("obs_rewards", carry.obs_rewards)]
+
+    sds = jax.ShapeDtypeStruct
+    outputs = [("active", sds((P, N), i32)), ("state", sds((P, N), i32)),
+               ("open_idx", sds((P, N), i32)), ("bind", sds((P, N), i32)),
+               ("idset", sds((P, N, A), i32)), ("ring", sds((P, K), i32)),
+               ("ring_ptr", sds((P,), i32)),
+               ("complex_count", sds((P,), f32)),
+               ("pms_created", sds((P,), f32)),
+               ("lat_n", sds((S,), f32)), ("lat_l", sds((S,), f32)),
+               ("fscal_out", sds((6,), f32)),
+               ("iscal_out", sds((3,), i32)),
+               ("l_e", sds((W,), f32)), ("n_pm", sds((W,), f32)),
+               ("shed", sds((W,), i32)), ("dropped", sds((W,), i32))]
+    if cfg.emit_matches:
+        outputs += [("m_open", sds((W, P, N), i32)),
+                    ("m_bind", sds((W, P, N), i32))]
+    if cfg.gather_stats:
+        outputs += [("obs_counts", sds((P, M, M), f32)),
+                    ("obs_rewards", sds((P, M, M), f32))]
+    in_idx = {name: k for k, (name, _) in enumerate(inputs)}
+    out_idx = {name: k for k, (name, _) in enumerate(outputs)}
+    aliases = {in_idx[name]: out_idx[name] for name in out_idx
+               if name in in_idx}
+
+    out = pl.pallas_call(
+        functools.partial(_block_kernel, spec=spec),
+        out_shape=[shape for _, shape in outputs],
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*[arr for _, arr in inputs])
+
+    (active, state, open_idx, bind, idset, ring, ring_ptr, cplx, crtd,
+     lat_n, lat_l, fscal_o, iscal_o, l_e, n_pm, shed, dropped) = out[:17]
+    k = 17
+    if cfg.emit_matches:
+        m_open, m_bind = out[k], out[k + 1]
+        k += 2
+    else:
+        m_open = jnp.zeros((W, P, 0), i32)
+        m_bind = jnp.zeros((W, P, 0), i32)
+    obs_c, obs_r = ((out[k], out[k + 1]) if cfg.gather_stats
+                    else (carry.obs_counts, carry.obs_rewards))
+
+    carry2 = carry._replace(
+        pms=pms._replace(active=active != 0, state=state,
+                         open_idx=open_idx, bind=bind, idset=idset),
+        ring=ring, ring_ptr=ring_ptr,
+        sim_time=fscal_o[0], ebl_frac=fscal_o[1], ema_gap=fscal_o[2],
+        prev_arrival=fscal_o[3], overflow=fscal_o[4],
+        ebl_dropped=fscal_o[5],
+        complex_count=cplx, pms_created=crtd,
+        obs_counts=obs_c, obs_rewards=obs_r,
+        lat_samples_n=lat_n, lat_samples_l=lat_l, lat_ptr=iscal_o[2])
+    rows = dict(l_e=l_e, n_pm=n_pm, shed=shed != 0, dropped=dropped != 0,
+                match_open=m_open, match_bind=m_bind)
+    return carry2, rows, iscal_o[0] != 0, iscal_o[1]

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import pad_to_tile
+
 
 def _nfa_kernel(state_ref, bind_ref, active_ref, tcol_ref, scal_ref,
                 newstate_ref, completed_ref, *, m: int):
@@ -61,12 +63,8 @@ def nfa_advance_pallas(state: jax.Array, bind: jax.Array, active: jax.Array,
     N = state.shape[0]
     m = trans_col.shape[0]
     tile = min(tile, N)
-    pad = (-N) % tile
-    if pad:
-        state = jnp.concatenate([state, jnp.zeros((pad,), state.dtype)])
-        bind = jnp.concatenate([bind, jnp.full((pad,), -1, bind.dtype)])
-        active = jnp.concatenate([active,
-                                  jnp.zeros((pad,), active.dtype)])
+    state, bind, active, pad = pad_to_tile(
+        tile, (state, 0), (bind, -1), (active, 0))
     scal = jnp.array([ev_bind, final, use_binding], jnp.int32)
     new_state, completed = pl.pallas_call(
         functools.partial(_nfa_kernel, m=m),

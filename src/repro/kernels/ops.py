@@ -18,11 +18,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import shedder as shd
+from repro.kernels.block_step import block_step  # noqa: F401
 from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
 from repro.kernels.nfa_transition import nfa_advance_pallas  # noqa: F401
 from repro.kernels.shed_select import (utility_histogram_pallas,
                                        utility_lookup_dyn_pallas,
                                        utility_lookup_pallas)
+from repro.kernels.tiling import pad_to_tile, tile_pad  # noqa: F401
 
 
 def default_interpret() -> bool:

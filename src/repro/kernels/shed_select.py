@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.shedder import bucket_edges
+from repro.kernels.tiling import pad_to_tile
 
 
 def _lookup_kernel(state_ref, rw_ref, active_ref, table_ref, bs_ref,
@@ -66,12 +67,8 @@ def utility_lookup_dyn_pallas(state, r_w, active, table, bin_size, *,
     N = state.shape[0]
     num_bins, m = table.shape
     tile = min(tile, N)
-    pad = (-N) % tile
-    if pad:
-        state = jnp.concatenate([state, jnp.zeros((pad,), state.dtype)])
-        r_w = jnp.concatenate([r_w, jnp.ones((pad,), r_w.dtype)])
-        active = jnp.concatenate(
-            [active, jnp.zeros((pad,), active.dtype)])
+    state, r_w, active, pad = pad_to_tile(
+        tile, (state, 0), (r_w, 1), (active, 0))
     bs = jnp.asarray(bin_size, jnp.float32).reshape(1)
     out = pl.pallas_call(
         functools.partial(_lookup_kernel, num_bins=num_bins, m=m,
@@ -132,9 +129,7 @@ def utility_histogram_pallas(u, lo, hi, *, nbins: int = 64, tile: int = 256,
     """
     N = u.shape[0]
     tile = min(tile, N)
-    pad = (-N) % tile
-    if pad:
-        u = jnp.concatenate([u, jnp.full((pad,), jnp.nan, u.dtype)])
+    u, pad = pad_to_tile(tile, (u, jnp.nan))
     # Shared edge expression (core.shedder.bucket_edges): boundary values
     # bucket identically on the jnp and Pallas histogram paths.
     edges = bucket_edges(lo, hi, nbins)

@@ -27,6 +27,56 @@ from repro.models import settings as SET
 from repro.models.config import ModelConfig
 
 
+def engine_block_intensity(engine_cfg) -> dict:
+    """Arithmetic-intensity estimate for the CEP per-event step: the
+    unfused per-event scan vs the fused event-block kernel
+    (kernels/block_step.py, DESIGN.md §10).
+
+    XLA's HLO cost analysis counts a while-loop body once regardless of
+    trip count AND cannot see VMEM residency (the fused kernel's whole
+    point is that the store is loaded once per W events instead of once
+    per event), so this is an analytic model, not an HLO readout:
+
+      * the store is P·N slots; per event the operator runs ~14
+        elementwise ops per slot (expire, advance lookup + selects,
+        completion detect, spawn compaction, activity reductions);
+      * the unfused step streams the five (P, N) store arrays (+ the
+        (P, N, A) idset for ANY-capable pattern sets) from memory ~6
+        times per event (advance, spawn, utility/overload bookkeeping
+        read-modify-write pairs — the op inventory of DESIGN.md §8);
+      * the fused kernel loads and stores the same arrays ONCE per
+        W-event block, plus per-event row IO (StepOut columns and the
+        classified event).
+
+    Emitted into BENCH_engine.json by benchmarks/bench_engine.py so the
+    perf trajectory records the memory-traffic claim next to the
+    measured events/s.
+    """
+    P, N, A = (engine_cfg.num_patterns, engine_cfg.max_pms,
+               engine_cfg.max_any_ids)
+    W = engine_cfg.block_events
+    any_capable = engine_cfg.kinds != "seq"
+    store_bytes = P * N * (4 * 4 + 1)          # state/open/bind ×i32 + mask
+    if any_capable:
+        store_bytes += P * N * A * 4
+    row_bytes = 4 * 4 + 8 * P * 4              # StepOut row + event columns
+    ops_per_slot = 14.0
+    flops_per_event = ops_per_slot * P * N
+    unfused_passes = 6.0
+    bytes_unfused = unfused_passes * store_bytes + row_bytes
+    bytes_fused = 2.0 * store_bytes / W + row_bytes
+    return {
+        "store_bytes": store_bytes,
+        "flops_per_event": flops_per_event,
+        "bytes_per_event_unfused": bytes_unfused,
+        "bytes_per_event_fused": bytes_fused,
+        "intensity_unfused": flops_per_event / bytes_unfused,
+        "intensity_fused": flops_per_event / bytes_fused,
+        "traffic_ratio": bytes_unfused / bytes_fused,
+        "block_events": W,
+    }
+
+
 def analysis_depths(cfg: ModelConfig) -> tuple[ModelConfig, ModelConfig,
                                                int, int, int]:
     """(cfg_L1, cfg_L2, L1, L2, L_target)."""

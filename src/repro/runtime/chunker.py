@@ -27,6 +27,27 @@ def num_events(events: EventBatch, axis: int = 0) -> int:
     return jax.tree.leaves(events)[0].shape[axis]
 
 
+# Per-dispatch event budget the auto-grouping policy targets: small chunks
+# group until one device dispatch covers ~this many events, which is where
+# the per-chunk slicing/dispatch overhead measurably flattens out
+# (BENCH_engine.json chunk_sweep; chunk=256 went from 12.6% over the
+# monolithic scan at the old fixed group of 16 to parity at 32).
+GROUP_EVENT_BUDGET = 8192
+
+
+def suggested_group_chunks(chunk_size: int) -> int:
+    """Default macro-batch size (chunks per dispatch) for a chunk size.
+
+    Chunks below 1024 events group until a dispatch covers
+    ``GROUP_EVENT_BUDGET`` events; larger chunks keep the legacy group of
+    16 (already past the flat part of the curve)."""
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive: {chunk_size}")
+    if chunk_size >= 1024:
+        return 16
+    return max(16, GROUP_EVENT_BUDGET // chunk_size)
+
+
 def _take(x, start: int, stop: int, axis: int):
     idx = [slice(None)] * axis + [slice(start, stop)]
     y = x[tuple(idx)]

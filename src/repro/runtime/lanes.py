@@ -75,7 +75,8 @@ def run_chunk_lanes(cfg: eng.EngineConfig, model: eng.EngineModel,
     lane to running each lane through ``run_engine`` on its own
     (tests/test_runtime.py).
     """
-    return eng._scan_events_lanes(cfg, model, events, carry, start)
+    return eng._scan_events_lanes_backend(cfg, model, events, carry,
+                                          start)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",),
@@ -89,4 +90,5 @@ def run_chunk_lanes_donated(cfg: eng.EngineConfig, model: eng.EngineModel,
     arriving chunk's storage instead of fresh allocations.  Only for
     callers that consume each chunk exactly once (the MultiTenantRuntime
     steady-state loop feeds it freshly sliced ChunkBuffer pieces)."""
-    return eng._scan_events_lanes(cfg, model, events, carry, start)
+    return eng._scan_events_lanes_backend(cfg, model, events, carry,
+                                          start)

@@ -39,8 +39,20 @@ class RuntimeConfig:
     # chunks run in ONE device dispatch (a lax.scan over chunks with the
     # per-chunk telemetry vectors computed in-scan), amortizing per-chunk
     # slicing/dispatch/transfer costs.  Groups never cross a refresh
-    # boundary, so the host keeps its control cadence.  1 disables.
-    group_chunks: int = 16
+    # boundary, so the host keeps its control cadence.  None (the
+    # default) sizes the group from the chunk size
+    # (``chunker.suggested_group_chunks``: small chunks group until one
+    # dispatch covers ~8k events); 1 disables grouping.
+    group_chunks: int | None = None
+    # Unroll factor for the outer chunk scan inside a grouped dispatch
+    # (lax.scan ``unroll=``): >1 trades compile time for fewer loop-back
+    # edges on very small chunks.  1 keeps the plain scan.
+    scan_unroll: int = 1
+
+    def effective_group_chunks(self) -> int:
+        if self.group_chunks is None:
+            return chunker.suggested_group_chunks(self.chunk_size)
+        return max(1, self.group_chunks)
 
 
 def _make_group_runner(scan_fn, chunk_axis: int):
@@ -51,10 +63,11 @@ def _make_group_runner(scan_fn, chunk_axis: int):
     instances differ only in the engine scan and where the chunk size
     sits in the event leaves ((B, chunk, ...) vs (B, L, chunk, ...))."""
 
-    @functools.partial(jax.jit, static_argnames=("cfg",),
+    @functools.partial(jax.jit, static_argnames=("cfg", "unroll"),
                        donate_argnames=("carry", "events"))
     def run(cfg: eng.EngineConfig, model: eng.EngineModel,
-            events: eng.EventBatch, carry: eng.Carry, start: jax.Array):
+            events: eng.EventBatch, carry: eng.Carry, start: jax.Array,
+            unroll: int = 1):
         lead = jax.tree.leaves(events)[0]
         b, cs = lead.shape[0], lead.shape[chunk_axis]
         starts = start + cs * jnp.arange(b, dtype=jnp.int32)
@@ -64,13 +77,16 @@ def _make_group_runner(scan_fn, chunk_axis: int):
             c, outs = scan_fn(cfg, model, ev_b, c, s)
             return c, TM.device_chunk_stats(outs, c)
 
-        return jax.lax.scan(body, carry, (events, starts))
+        return jax.lax.scan(body, carry, (events, starts),
+                            unroll=max(1, min(unroll, b)))
 
     return run
 
 
-_run_group_single = _make_group_runner(eng._scan_events, chunk_axis=1)
-_run_group_lanes = _make_group_runner(eng._scan_events_lanes, chunk_axis=2)
+_run_group_single = _make_group_runner(eng._scan_events_backend,
+                                       chunk_axis=1)
+_run_group_lanes = _make_group_runner(eng._scan_events_lanes_backend,
+                                      chunk_axis=2)
 
 
 class StreamRuntime:
@@ -151,7 +167,7 @@ class StreamRuntime:
                 for start, chunk in self._buf.drain()]
 
     def _group_limit(self) -> int:
-        return max(1, self.rt.group_chunks)
+        return self.rt.effective_group_chunks()
 
     def _chunks_to_boundary(self) -> int:
         """Chunks until the next refresh decision — groups must not cross
@@ -184,7 +200,8 @@ class StreamRuntime:
         ev = jax.tree.map(
             lambda x: x.reshape((g, -1) + x.shape[1:]), piece)
         return _run_group_single(self.cfg, self.model, ev, self.carry,
-                                 eng.wrap_event_index(start))
+                                 eng.wrap_event_index(start),
+                                 self.rt.scan_unroll)
 
     def _run_group(self, start: int, piece: eng.EventBatch,
                    g: int) -> list[TM.ChunkStats]:
@@ -280,7 +297,8 @@ class MultiTenantRuntime(StreamRuntime):
 
     def _group_limit(self) -> int:
         # The sharded path has no grouped runner — chunk-at-a-time.
-        return 1 if self.mesh is not None else max(1, self.rt.group_chunks)
+        return 1 if self.mesh is not None \
+            else self.rt.effective_group_chunks()
 
     def _run_grouped(self, piece: eng.EventBatch, start: int, g: int):
         # (L, g·cs, ...) → (g, L, cs, ...): chunk axis leads the scan.
@@ -289,7 +307,8 @@ class MultiTenantRuntime(StreamRuntime):
             return jnp.swapaxes(x, 0, 1)
         ev = jax.tree.map(rs, piece)
         return _run_group_lanes(self.cfg, self.model, ev, self.carry,
-                                eng.wrap_event_index(start))
+                                eng.wrap_event_index(start),
+                                self.rt.scan_unroll)
 
     def _maybe_refresh(self) -> bool:
         if not self._refresh_on() \

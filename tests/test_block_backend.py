@@ -1,0 +1,322 @@
+"""Event-block megakernel equivalence (DESIGN.md §10).
+
+``backend="pallas_block"`` fuses ``block_events`` events into one kernel
+launch with the PM store resident, splitting blocks at Algorithm-1 fire
+points.  Everything here is BITWISE against ``backend="xla"``:
+
+  1. the q1/q4 fixtures at non-tile-multiple store sizes, overloaded so
+     the block-split shed path actually executes, for every shedder and
+     every W in {1, 8, 32, 128} — whole carry (incl. gathered stats) and
+     whole StepOut (incl. emitted match identities);
+  2. ragged chunked streaming (run_engine_chunk) replaying the
+     monolithic xla scan for every W, including W > chunk;
+  3. the oracle scenario generator's padded random scenarios
+     (tests/test_oracle.py) across the W grid;
+  4. the runtime surfaces: grouped StreamRuntime, vmapped tenant lanes,
+     and the pattern-sharded engine.
+
+Plus the satellite edge cases: ``merge_carries`` (zero-lane merge,
+multi-pattern lane-major layout) and ``wrap_event_index`` at the int32
+boundary.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.cep import runner
+from repro.data import streams
+from repro import runtime as RT
+
+from test_oracle import _scenario
+
+COST = dict(c_base=3e-4, c_match=6e-5, c_shed_base=1.5e-4, c_shed_pm=1.5e-6,
+            c_ebl=6e-5)
+SHEDDERS = (eng.SHED_NONE, eng.SHED_PSPICE, eng.SHED_PMBL, eng.SHED_EBL)
+W_GRID = (1, 8, 32, 128)
+
+
+def _assert_tree_equal(a, b, what=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=what)
+
+
+def _setup(name, max_pms=37, n=300, seed=0, rate_mult=2.0,
+           shedder=eng.SHED_PSPICE, **kw):
+    """Overloaded fixture at a non-tile-multiple store size."""
+    specs = [pat.make_q1(window_size=400, num_symbols=4) if name == "q1"
+             else pat.make_q4(any_n=3, window_size=120, slide=40)]
+    cp = pat.compile_patterns(specs)
+    cfg = runner.default_config(cp, max_pms=max_pms, latency_bound=0.005,
+                                gather_stats=True, emit_matches=True,
+                                shedder=shedder, **COST, **kw)
+    model = eng.make_model(cp, cfg)
+    rate = rate_mult * 3.0 / (cfg.c_base + cfg.c_match * 0.3 * max_pms)
+    raw = streams.gen_stock(n, num_symbols=50, pattern_symbols=4,
+                            p_class=0.05, seed=100 + seed)
+    ev = streams.classify(specs, raw, rate=rate, seed=seed)
+    return cfg, model, ev
+
+
+def _block(cfg, w):
+    return dataclasses.replace(cfg, backend=eng.BACKEND_PALLAS_BLOCK,
+                               block_events=w)
+
+
+class TestBlockBackendEquivalence:
+    """pallas_block == xla, whole carry and whole StepOut, bit for bit."""
+
+    @pytest.mark.parametrize("w", W_GRID)
+    @pytest.mark.parametrize("shedder", SHEDDERS)
+    def test_w_sweep_q1(self, w, shedder):
+        cfg, model, ev = _setup("q1", shedder=shedder)
+        cx, ox = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        if shedder in (eng.SHED_PSPICE, eng.SHED_PMBL):
+            assert float(cx.pms_shed) > 0, "fixture must exercise the split"
+        if shedder == eng.SHED_EBL:
+            assert float(cx.ebl_dropped) > 0, "fixture must drop"
+        cfg_b = _block(cfg, w)
+        cb, ob = eng.run_engine(cfg_b, model, ev, eng.init_carry(cfg_b))
+        _assert_tree_equal(cx, cb, f"q1/{shedder}/W={w} carry")
+        _assert_tree_equal(ox, ob, f"q1/{shedder}/W={w} outs")
+
+    @pytest.mark.parametrize("w", (8, 32))
+    @pytest.mark.parametrize("shedder", SHEDDERS)
+    def test_q4_any_in_windows(self, w, shedder):
+        """ANY advance + slide-window ring spawns through the kernel."""
+        cfg, model, ev = _setup("q4", max_pms=53, shedder=shedder)
+        cx, ox = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        cfg_b = _block(cfg, w)
+        cb, ob = eng.run_engine(cfg_b, model, ev, eng.init_carry(cfg_b))
+        _assert_tree_equal(cx, cb, f"q4/{shedder}/W={w} carry")
+        _assert_tree_equal(ox, ob, f"q4/{shedder}/W={w} outs")
+
+    @pytest.mark.parametrize("w", W_GRID)
+    def test_ragged_chunked(self, w):
+        """Ragged chunks (100 ∤ 320, W > chunk included) replay the
+        monolithic xla scan."""
+        cfg, model, ev = _setup("q1", n=320)
+        cx, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(cx.pms_shed) > 0
+        cfg_b = _block(cfg, w)
+        carry = eng.init_carry(cfg_b)
+        for start, piece in RT.iter_chunks(ev, 100):
+            carry, _ = eng.run_engine_chunk(cfg_b, model, piece, carry,
+                                            jnp.int32(start))
+        _assert_tree_equal(cx, carry, f"chunked W={w}")
+
+    def test_spawn_overflow(self):
+        """Tiny store: the kernel's rank/overflow bookkeeping matches the
+        engine's free-list compaction when candidates exceed slots."""
+        cfg, model, ev = _setup("q4", max_pms=4, n=600, rate_mult=1.0,
+                                shedder=eng.SHED_NONE)
+        cx, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(cx.overflow) > 0, "fixture must overflow"
+        cfg_b = _block(cfg, 32)
+        cb, _ = eng.run_engine(cfg_b, model, ev, eng.init_carry(cfg_b))
+        _assert_tree_equal(cx, cb, "overflow carry")
+
+
+class TestOracleScenarioWSweep:
+    """The oracle suite's padded random scenarios (one shared static
+    config per W — scenario randomness lives in the arrays) through the
+    block backend, monolithic and ragged-chunked, vs xla."""
+
+    @pytest.mark.parametrize("w", W_GRID)
+    def test_scenarios_block_equals_xla(self, w):
+        for seed in range(6):
+            cfg, model, ev = _scenario(seed)
+            cx, ox = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+            cfg_b = _block(cfg, w)
+            cb, ob = eng.run_engine(cfg_b, model, ev,
+                                    eng.init_carry(cfg_b))
+            _assert_tree_equal(cx, cb, f"scenario {seed} W={w} carry")
+            _assert_tree_equal(ox, ob, f"scenario {seed} W={w} outs")
+            assert eng.match_sets(ob) == eng.match_sets(ox)
+            carry_c = eng.init_carry(cfg_b)
+            for start, piece in RT.iter_chunks(ev, 100):
+                carry_c, _ = eng.run_engine_chunk(
+                    cfg_b, model, piece, carry_c, jnp.int32(start))
+            _assert_tree_equal(cx, carry_c,
+                               f"scenario {seed} W={w} chunked")
+
+
+class TestBlockRuntimeSurfaces:
+    """The runtime entry points get the fused path through the backend
+    dispatchers — results stay bitwise those of the xla engine."""
+
+    def test_stream_runtime_grouped(self):
+        cfg, model, ev = _setup("q1", n=1024)
+        cx, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        srt = RT.StreamRuntime(_block(cfg, 32), model,
+                               rt=RT.RuntimeConfig(chunk_size=128))
+        srt.push(ev, flush=True)
+        _assert_tree_equal(cx, srt.carry, "grouped runtime")
+
+    def test_lanes_equal_sequential(self):
+        """Vmapped block kernel: each lane bitwise == its own
+        single-lane xla run (incl. per-lane shed splits)."""
+        L = 2
+        models, evs = [], []
+        for lane in range(L):
+            cfg, m, e = _setup("q1", n=256, seed=lane,
+                               rate_mult=1.5 + lane)
+            models.append(m)
+            evs.append(e)
+        cfg_b = _block(cfg, 32)
+        cL, outsL = RT.run_chunk_lanes(
+            cfg_b, RT.stack(models), RT.stack(evs),
+            RT.init_lane_carries(cfg_b, L), jnp.int32(0))
+        for lane in range(L):
+            cx, ox = eng.run_engine(cfg, models[lane], evs[lane],
+                                    eng.init_carry(cfg, seed=lane))
+            _assert_tree_equal(cx, jax.tree.map(lambda x: x[lane], cL),
+                               f"lane {lane} carry")
+            _assert_tree_equal(ox, jax.tree.map(lambda x: x[lane], outsL),
+                               f"lane {lane} outs")
+
+    def test_pattern_sharded_engine(self):
+        """run_engine_sharded drives the block backend through
+        shard_map with pm_specs (single-axis mesh)."""
+        from repro.dist import sharding as SH
+        cfg, model, ev = _scenario(3)
+        cfg_b = _block(cfg, 32)
+        cx, ox = eng.run_engine(cfg_b, model, ev, eng.init_carry(cfg_b))
+        cs, os_ = SH.run_engine_sharded(cfg_b, model, ev,
+                                        eng.init_carry(cfg_b))
+        _assert_tree_equal(cx, cs, "sharded block carry")
+        _assert_tree_equal(ox, os_, "sharded block outs")
+
+
+class TestLazyInversion:
+    """The kernel's Algorithm-1 check uses the cond-based f-inverse —
+    must be BIT-identical to ``invert_latency`` for both model kinds
+    (a divergent bit flips a shed decision and splits a block)."""
+
+    @pytest.mark.parametrize("kind", [0, 1])  # LINEAR, NLOGN
+    def test_matches_eager_inverse(self, kind):
+        from repro.core import overload as ovl
+        m = ovl.LatencyModel(a=jnp.float32(3.7e-5), b=jnp.float32(1.1e-4),
+                             kind=jnp.int32(kind))
+        targets = jnp.asarray(
+            np.linspace(0.0, 2.0, 257), jnp.float32)
+        eager = jax.vmap(lambda t: ovl.invert_latency(m, t))(targets)
+        lazy = jax.vmap(lambda t: ovl.invert_latency_lazy(m, t))(targets)
+        np.testing.assert_array_equal(np.asarray(eager), np.asarray(lazy))
+
+    @pytest.mark.parametrize("kind", [0, 1])
+    def test_detect_overload_lazy_flag(self, kind):
+        from repro.core import overload as ovl
+        m = ovl.LatencyModel(a=jnp.float32(5e-5), b=jnp.float32(2e-4),
+                             kind=jnp.int32(kind))
+        g = ovl.LatencyModel(a=jnp.float32(1e-6), b=jnp.float32(5e-5),
+                             kind=jnp.int32(0))
+        for n_pm in (0, 17, 4096):
+            a = ovl.detect_overload(m, g, jnp.float32(0.01),
+                                    jnp.int32(n_pm), 0.05)
+            b = ovl.detect_overload(m, g, jnp.float32(0.01),
+                                    jnp.int32(n_pm), 0.05, lazy=True)
+            assert bool(a.shed) == bool(b.shed)
+            assert int(a.rho) == int(b.rho)
+            np.testing.assert_array_equal(np.asarray(a.l_e),
+                                          np.asarray(b.l_e))
+
+
+class TestMergeCarriesEdges:
+    """Satellite: merge_carries edge cases, exercised directly (the
+    runtime tests only hit the L>=1 uniform path)."""
+
+    def test_zero_lane_merge(self):
+        cfg = _setup("q1")[0]
+        stacked = jax.tree.map(
+            lambda x: jnp.zeros((0,) + x.shape, x.dtype),
+            eng.init_carry(cfg))
+        merged = eng.merge_carries(stacked)
+        assert merged.pms.active.shape == (0, cfg.max_pms)
+        assert float(merged.sim_time) == 0.0
+        assert float(merged.pms_shed) == 0.0
+        assert merged.ring.shape == (0, cfg.ring_size)
+
+    def test_multi_pattern_lane_major_layout(self):
+        """P>1 patterns per lane: the merged pattern axis is lane-major
+        (lane 0's P patterns, then lane 1's), and scalar folds follow
+        their documented semantics (sum counters, max clocks)."""
+        specs = [pat.make_q1(window_size=50, num_symbols=4),
+                 pat.make_q1(window_size=80, num_symbols=4)]
+        cp = pat.compile_patterns(specs)
+        cfg = runner.default_config(cp, max_pms=8, **COST)
+        L, P = 3, cfg.num_patterns
+        carries = []
+        for lane in range(L):
+            c = eng.init_carry(cfg, seed=lane)
+            c = c._replace(
+                complex_count=jnp.arange(P, dtype=jnp.float32) + 10 * lane,
+                pms_shed=jnp.float32(lane),
+                sim_time=jnp.float32(lane * 0.5),
+                lat_ptr=jnp.int32(lane))
+            carries.append(c)
+        merged = eng.merge_carries(RT.stack(carries))
+        want = np.concatenate(
+            [np.arange(P, dtype=np.float32) + 10 * lane
+             for lane in range(L)])
+        np.testing.assert_array_equal(np.asarray(merged.complex_count),
+                                      want)
+        assert merged.pms.active.shape == (L * P, cfg.max_pms)
+        assert float(merged.pms_shed) == sum(range(L))       # counters sum
+        assert float(merged.sim_time) == 0.5 * (L - 1)       # clocks max
+        assert int(merged.lat_ptr) == L - 1
+
+
+class TestWrapEventIndex:
+    """Satellite: the unbounded-stream index mapping at the int32 edge."""
+
+    def test_boundary_values(self):
+        assert int(eng.wrap_event_index(0)) == 0
+        assert int(eng.wrap_event_index(2**31 - 1)) == 2**31 - 1
+        assert int(eng.wrap_event_index(2**31)) == -(2**31)
+        assert int(eng.wrap_event_index(2**32 - 1)) == -1
+        assert int(eng.wrap_event_index(2**32 + 7)) == 7
+
+    def test_window_differences_survive_wrap(self):
+        """i - open_idx stays correct across the wrap as long as windows
+        are << 2^31 (the property the engine's expiry relies on)."""
+        a = eng.wrap_event_index(2**31 + 5)
+        b = eng.wrap_event_index(2**31 - 3)
+        assert int(a - b) == 8
+
+    def test_engine_invariant_to_index_origin(self):
+        """A chunked run started at ``origin`` and at ``origin + 2^31``
+        (both wrapped) produces identical results — only index
+        DIFFERENCES enter the operator."""
+        cfg, model, ev = _setup("q1", n=128)
+        cfg = dataclasses.replace(cfg, emit_matches=False)
+
+        def run(origin):
+            carry = eng.init_carry(cfg)
+            outs = []
+            for start, piece in RT.iter_chunks(ev, 64):
+                # Window-open indices live in the carry, so both runs
+                # must spawn in the same modular space from event 0 on.
+                carry, o = eng.run_engine_chunk(
+                    cfg, model, piece, carry,
+                    eng.wrap_event_index(origin + start))
+                outs.append(o)
+            return carry, outs
+
+        c0, o0 = run(0)
+        c1, o1 = run(2**31)
+        for field in ("complex_count", "pms_created", "pms_shed",
+                      "overflow", "ebl_dropped"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(c0, field)),
+                np.asarray(getattr(c1, field)), field)
+        for a, b in zip(o0, o1):
+            np.testing.assert_array_equal(np.asarray(a.l_e),
+                                          np.asarray(b.l_e))
+            np.testing.assert_array_equal(np.asarray(a.n_pm),
+                                          np.asarray(b.n_pm))

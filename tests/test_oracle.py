@@ -124,8 +124,12 @@ def _scenario(seed, families=None):
 
 
 def _assert_matches_oracle(cfg, model, ev, o, what):
-    """Engine (both backends × monolithic/chunked) == oracle, exactly."""
-    for backend in (eng.BACKEND_XLA, eng.BACKEND_PALLAS):
+    """Engine (all three backends × monolithic/chunked) == oracle,
+    exactly.  The block backend runs at the default W=32 here; the W
+    grid {1, 8, 32, 128} is swept against xla on these same scenarios in
+    tests/test_block_backend.py."""
+    for backend in (eng.BACKEND_XLA, eng.BACKEND_PALLAS,
+                    eng.BACKEND_PALLAS_BLOCK):
         cfg_b = dataclasses.replace(cfg, backend=backend)
         carry, outs = eng.run_engine(cfg_b, model, ev, eng.init_carry(cfg_b))
         tag = f"{what}/{backend}"
@@ -186,11 +190,14 @@ class TestDifferentialShedders:
         ev = streams.classify(specs, raw, rate=rate, seed=seed)
         return cfg, model, ev
 
+    @pytest.mark.parametrize("backend", [eng.BACKEND_XLA,
+                                         eng.BACKEND_PALLAS_BLOCK])
     @pytest.mark.parametrize("name", ["q1", "q4"])
     @pytest.mark.parametrize("shedder", [eng.SHED_NONE, eng.SHED_PSPICE,
                                          eng.SHED_PMBL, eng.SHED_EBL])
-    def test_shedder_run_equals_oracle(self, name, shedder):
+    def test_shedder_run_equals_oracle(self, name, shedder, backend):
         cfg, model, ev = self._fixture(name, shedder)
+        cfg = dataclasses.replace(cfg, backend=backend)
         carry, outs = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
         o = orc.run_oracle(cfg, model, ev, seed=0)
         tag = f"{name}/{shedder}"
