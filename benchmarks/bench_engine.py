@@ -92,6 +92,42 @@ def _paper_workload(n: int, max_pms: int, seed: int = 7):
     return cfg, model, ev
 
 
+def _refuse_degraded() -> None:
+    """Refuse to record baselines from a silently-degraded build.
+
+    BENCH_engine.json is the regression gate's ground truth, so before
+    any timing runs, the benchmarked (non-legacy) configurations are
+    traced and their jaxprs run through the hot-path contract rules —
+    a build whose spawn allocator regressed to argsort, whose shed plan
+    sorts, or whose block kernel lost its store aliases must never
+    refresh the baseline.  Jaxpr-only artifacts (compile=False) keep
+    this to a few hundred ms; the legacy cell is the gate's machine-
+    speed probe and is deliberately NOT checked (its sort is the point).
+    """
+    from repro import analysis as A
+    from repro.analysis import pallas_rules as APR
+
+    cfg, model, ev = _paper_workload(64, pp.MAX_PMS)
+    ctr = A.get_contract("cep.run_engine")
+    jaxpr_rules = [r for r in A.RULES
+                   if r.name in ("no-sort", "no-callback", "control-flow")]
+    bad = []
+    for label, cell in (("xla", cfg), ("pallas_block", _blocked(cfg))):
+        art = A.trace_artifact(eng.run_engine, cell, model, ev,
+                               eng.init_carry(cell), name=f"bench[{label}]",
+                               n_events=64, compile=False)
+        fs = A.run_rules(art, ctr, rules=jaxpr_rules)
+        fs += APR.check_pallas_calls(art, ctr)
+        bad += [f for f in fs if not f.ok]
+    if bad:
+        for f in bad:
+            print(f"CONTRACT VIOLATION {f.cell}: {f.rule}: {f.evidence}",
+                  file=sys.stderr)
+        print("refusing to record baselines from a degraded build "
+              "(see repro.analysis / DESIGN.md §11)", file=sys.stderr)
+        sys.exit(2)
+
+
 def _time_engine(cfg, model, ev, n, reps) -> float:
     def run():
         t0 = time.perf_counter()
@@ -290,6 +326,7 @@ def main(argv=None) -> None:
         L, n_lane = 8, 8192
         sweep_n, sweep = 32768, (256, 1024, 4096)
 
+    _refuse_degraded()
     out = {"quick": bool(args.quick), "num_devices": len(jax.devices()),
            "backend": jax.default_backend()}
     print("name,events_per_s_new,derived")

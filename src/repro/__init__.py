@@ -10,7 +10,8 @@ one import away:
 """
 import importlib
 
-__all__ = ["cep", "core", "data", "dist", "eval", "kernels", "runtime"]
+__all__ = ["analysis", "cep", "core", "data", "dist", "eval", "kernels",
+           "launch", "runtime"]
 
 
 def __getattr__(name: str):

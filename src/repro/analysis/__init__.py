@@ -1,0 +1,35 @@
+"""repro.analysis — compile-time contract checker (DESIGN.md §11).
+
+Static analysis over COMPILED artifacts: jaxpr primitive censuses, HLO
+text rules, ``memory_analysis()`` byte budgets, ``input_output_alias``
+donation checks, Pallas BlockSpec geometry, and a retrace guard.  Entry
+points declare their invariants with :func:`contracts.contract`;
+``check_all`` sweeps every config cell and writes ANALYSIS.json.
+
+``contracts`` / ``tracing`` are import-light (the engine imports them);
+``driver`` imports the engine, so it is exposed lazily here.
+"""
+from repro.analysis.contracts import (      # noqa: F401
+    Contract, contract, get_contract, get_entry, registry)
+from repro.analysis.rules import (          # noqa: F401
+    Artifact, Finding, Rule, RULES, primitive_census, run_rules,
+    trace_artifact)
+from repro.analysis.tracing import (        # noqa: F401
+    CompileCounter, count_traces, reset_trace_counts, trace_counts)
+
+__all__ = ["Contract", "contract", "get_contract", "get_entry",
+           "registry", "Artifact", "Finding", "Rule", "RULES",
+           "primitive_census", "run_rules", "trace_artifact",
+           "CompileCounter", "count_traces", "reset_trace_counts",
+           "trace_counts", "check_all"]
+
+
+def __getattr__(name):
+    import importlib
+    if name in ("check_all", "driver"):
+        driver = importlib.import_module("repro.analysis.driver")
+        return driver if name == "driver" else driver.check_all
+    if name == "pallas_rules":
+        return importlib.import_module("repro.analysis.pallas_rules")
+    raise AttributeError(f"module 'repro.analysis' has no attribute "
+                         f"{name!r}")

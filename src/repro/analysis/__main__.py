@@ -1,0 +1,31 @@
+"""CLI: ``python -m repro.analysis [--quick] [--out ANALYSIS.json]``.
+
+Exit code 1 on any contract violation — the CI analysis job's gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced cell grid (tier-1 test subset)")
+    ap.add_argument("--out", default="ANALYSIS.json",
+                    help="JSON artifact path (default ANALYSIS.json)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.driver import check_all
+    result = check_all(quick=args.quick, out=args.out)
+    for row in result["rows"]:
+        mark = "ok  " if row["status"] == "pass" else "FAIL"
+        print(f"{mark} {row['rule']:<20} {row['cell']:<40} "
+              f"{row['evidence']}")
+    print(f"\n{result['cells']} cells, {len(result['rows'])} findings, "
+          f"{result['n_fail']} failures -> {args.out}")
+    return 0 if result["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,141 @@
+"""Performance contracts for the hot path (DESIGN.md §11).
+
+A :class:`Contract` is the machine-checked statement of the invariants a
+compiled entry point must uphold — the properties PRs 3-5 won (sort-free,
+allocation-bounded, retrace-free, donated carries) expressed as data
+instead of folklore.  Entry points declare their contract with the
+:func:`contract` decorator::
+
+    @contract("cep.run_engine", max_compiles=1, donate=())
+    @functools.partial(jax.jit, static_argnames=("cfg",))
+    def run_engine(cfg, model, events, carry): ...
+
+The decorator is ZERO-COST at call time: it registers the (function,
+contract) pair in a module registry and returns the function unchanged —
+no wrapper frame on the hot path.  ``repro.analysis.rules`` evaluates the
+contract against COMPILED artifacts (jaxpr + optimized HLO +
+``memory_analysis()``), and ``repro.analysis.driver.check_all`` sweeps
+every config cell and writes ANALYSIS.json.
+
+This module is import-cycle-free by design: the engine / runtime import
+it, so it must never import them (budget callables below are duck-typed
+over ``EngineConfig``'s attributes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+# Byte budgets may depend on the config cell being checked, so a budget
+# is either a plain int or a callable ``(cfg, n_events) -> int`` resolved
+# at check time (the decorator site cannot know the cell's shapes).
+Budget = "int | Callable | None"
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """The hot-path invariants one entry point promises (DESIGN.md §11).
+
+    Rule provenance — which PR established each invariant — lives with
+    the rule definitions in ``rules.RULES``; the contract only selects
+    and parameterizes them.
+    """
+    name: str
+    # Banned-op rules (PR 3): the compiled artifact must contain no sort
+    # (spawn allocation + Algorithm 2 are sort-free), no host callback
+    # (the scan never leaves the device), and no f64 (an accidental x64
+    # promotion doubles every store pass).
+    no_sort: bool = True
+    no_callback: bool = True
+    no_f64: bool = True
+    # Structural control-flow budget (jaxpr-level: scan/while and cond
+    # primitive counts).  The per-event step is straight-line code — new
+    # data-dependent loops are exactly how O(N log N) work sneaks back.
+    max_while: int | None = None
+    max_cond: int | None = None
+    # Donation (PR 2): argument names whose buffers the entry point
+    # promises to reuse.  Checked against the compiled module's
+    # ``input_output_alias`` table — a dropped ``donate_argnames`` still
+    # produces correct results while silently doubling steady-state
+    # memory, which is why this must be machine-checked.
+    donate: tuple = ()
+    # Retrace budget (PR 4): compilations per config cell across repeated
+    # calls with fresh same-shape data.  A leaked static argument (a
+    # Python scalar reaching the traced side) recompiles per VALUE.
+    max_compiles: int | None = None
+    # Allocation budgets (PR 3/5), resolved per cell: XLA temp bytes and
+    # the largest single gather result (the PR-3 regression class was a
+    # (P, N, C+1) gather temp materialized every event).
+    max_temp_bytes: object = None
+    max_gather_bytes: object = None
+    # Rule names waived for this entry point (legacy / oracle paths keep
+    # their sort on purpose — see DESIGN.md §11 "waivers").
+    waived: tuple = ()
+
+    def budget(self, field: str, cfg, n_events: int) -> int | None:
+        """Resolve a byte budget for one cell (callables get the cell)."""
+        v = getattr(self, field)
+        return v(cfg, n_events) if callable(v) else v
+
+
+_REGISTRY: dict = {}
+
+
+def contract(name: str, **kw) -> Callable:
+    """Declare a contract on an entry point; returns the function as-is."""
+    c = Contract(name=name, **kw)
+
+    def deco(fn):
+        _REGISTRY[name] = (fn, c)
+        return fn
+
+    return deco
+
+
+def get_contract(name: str) -> Contract:
+    return _REGISTRY[name][1]
+
+
+def get_entry(name: str):
+    return _REGISTRY[name][0]
+
+
+def registry() -> dict:
+    """name -> (entry point, Contract); a copy — callers cannot mutate."""
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Shared budget formulas (duck-typed over EngineConfig attributes)
+# ---------------------------------------------------------------------------
+
+def store_bytes(cfg) -> int:
+    """Bytes of one PM store: the unit allocation budgets scale in."""
+    per_slot = 4 * 4 + 1 + 4 * cfg.max_any_ids   # i32 ×4 + mask + idset
+    return cfg.num_patterns * cfg.max_pms * per_slot
+
+
+def hot_path_temp_budget(cfg, n_events: int) -> int:
+    """XLA temp-buffer budget for one engine scan.
+
+    Legitimate temps are a bounded number of store-shaped buffers (the
+    double-buffered scan carry, the spawn scatter operand, the advance
+    one-hot in the block kernel's interpret lowering) plus per-event
+    StepOut columns.  The constants were calibrated on the PR-6 sweep
+    (largest observed cell ~11× store + ~40 B/event) with ~2× headroom —
+    tight enough that one resurrected (P, N, C+1)-per-event temp inside
+    the scan body (the PR-3 regression class) blows the budget.
+    """
+    return 24 * store_bytes(cfg) + 128 * n_events * cfg.num_patterns \
+        + (1 << 17)
+
+
+def hot_path_gather_budget(cfg, n_events: int) -> int:
+    """Largest single gather result allowed in the compiled module.
+
+    The flat SEQ advance gather is (P·N,) i32; event-batch gathers are
+    O(n_events).  Anything store×classes-sized means the PR-3 flat-gather
+    rewrite regressed.
+    """
+    del n_events
+    return 8 * 4 * cfg.num_patterns * cfg.max_pms + (1 << 16)

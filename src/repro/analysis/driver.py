@@ -1,0 +1,161 @@
+"""check_all: sweep every config cell, evaluate every contract, emit
+ANALYSIS.json (the CI artifact).
+
+One cell = one contracted entry point compiled at one
+{backend x shedder x chunking} configuration on a small q1 workload.
+The cells are deliberately SMALL (n<=96 events, max_pms=48): the rules
+check compiled structure, not throughput, and structure is config-
+dependent but size-independent — a sort appears in the HLO for N=48
+exactly as it would for N=4096.
+
+The retrace guard is the one check that EXECUTES: each jitted entry is
+called twice per cell with fresh same-shape data, and executable-cache
+growth is compared against the contract's ``max_compiles`` budget
+(PR 4's "the whole sweep is 4 compiles" as a machine-checked fact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import contracts as C
+from repro.analysis import pallas_rules as PR
+from repro.analysis import rules as R
+from repro.analysis import tracing as T
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.cep import runner
+from repro.data import streams
+from repro.runtime import lanes as LN
+
+BACKENDS = (eng.BACKEND_XLA, eng.BACKEND_PALLAS, eng.BACKEND_PALLAS_BLOCK)
+SHEDDERS = (eng.SHED_NONE, eng.SHED_PSPICE, eng.SHED_PMBL, eng.SHED_EBL)
+
+_COST = dict(c_base=3e-4, c_match=6e-5, c_shed_base=1.5e-4,
+             c_shed_pm=1.5e-6, c_ebl=6e-5)
+
+
+def _workload(n: int = 96, max_pms: int = 48, seed: int = 0):
+    """The q1 fixture every cell reuses (cfg varies per cell)."""
+    specs = [pat.make_q1(window_size=400, num_symbols=4)]
+    cp = pat.compile_patterns(specs)
+    cfg = runner.default_config(cp, max_pms=max_pms, latency_bound=0.005,
+                                gather_stats=True,
+                                shedder=eng.SHED_PSPICE, **_COST)
+    model = eng.make_model(cp, cfg)
+    rate = 3.0 / (cfg.c_base + cfg.c_match * 0.3 * max_pms)
+    raw = streams.gen_stock(n, num_symbols=50, pattern_symbols=4,
+                            p_class=0.05, seed=100 + seed)
+    ev = streams.classify(specs, raw, rate=rate, seed=seed)
+    return cfg, model, ev
+
+
+def _cells(quick: bool):
+    """(backend, shedder) grid for run_engine; quick keeps one row and
+    one column so tests touch every backend and every shedder once."""
+    if not quick:
+        return [(b, s) for b in BACKENDS for s in SHEDDERS]
+    cells = [(b, eng.SHED_PSPICE) for b in BACKENDS]
+    cells += [(eng.BACKEND_XLA, s) for s in SHEDDERS
+              if s != eng.SHED_PSPICE]
+    return cells
+
+
+def _leaves(tree) -> int:
+    return len(jax.tree.leaves(tree))
+
+
+def _findings_for(art, ctr):
+    return R.run_rules(art, ctr) + PR.check_pallas_calls(art, ctr)
+
+
+def check_all(quick: bool = False, out: str | None = None) -> dict:
+    """Evaluate every registered contract across the config sweep.
+
+    Returns {"ok", "n_fail", "cells", "rows"}; with ``out`` also writes
+    the same structure as JSON (the CI artifact). ``quick=True`` runs the
+    reduced grid tier-1 tests use (~6 compiles instead of ~20).
+    """
+    cfg0, model, ev = _workload()
+    n = ev.ev_class.shape[0]
+    findings = []
+
+    # ---- run_engine over the {backend x shedder} grid -------------------
+    c_run = C.get_contract("cep.run_engine")
+    for backend, shedder in _cells(quick):
+        cfg = dataclasses.replace(cfg0, backend=backend, shedder=shedder)
+        cell = f"run_engine[{backend}/{shedder}]"
+        art = R.trace_artifact(eng.run_engine, cfg, model, ev,
+                               eng.init_carry(cfg), name=cell, n_events=n)
+        findings += _findings_for(art, c_run)
+
+    # ---- run_engine_chunk (donation must hold on every backend) ---------
+    c_chunk = C.get_contract("cep.run_engine_chunk")
+    chunk = 32
+    piece = jax.tree.map(lambda x: x[:chunk], ev)
+    for backend in (BACKENDS if not quick else BACKENDS[:1]):
+        cfg = dataclasses.replace(cfg0, backend=backend)
+        carry = eng.init_carry(cfg)
+        cell = f"run_engine_chunk[{backend}/{cfg.shedder}]"
+        art = R.trace_artifact(eng.run_engine_chunk, cfg, model, piece,
+                               carry, jnp.int32(0), name=cell,
+                               n_events=chunk,
+                               min_alias_pairs=_leaves(carry))
+        findings += _findings_for(art, c_chunk)
+
+    # ---- lane-batched chunk entries -------------------------------------
+    L = 2
+    lmodel = LN.broadcast_model(model, L)
+    lev = jax.tree.map(lambda x: jnp.stack([x[:chunk]] * L), ev)
+    for name in ("runtime.run_chunk_lanes", "runtime.run_chunk_lanes"
+                 "_donated"):
+        fn, lctr = C.registry()[name]
+        lcarry = LN.init_lane_carries(cfg0, L)
+        cell = f"{name.split('.')[1]}[{cfg0.backend}/{cfg0.shedder}]"
+        art = R.trace_artifact(fn, cfg0, lmodel, lev, lcarry,
+                               jnp.int32(0), name=cell, n_events=chunk,
+                               min_alias_pairs=_leaves(lcarry))
+        findings += _findings_for(art, lctr)
+
+    # ---- retrace guard: execute twice per cell, count compiles ----------
+    findings += _retrace_sweep(cfg0, model, ev, quick)
+
+    rows = [f.row() for f in findings]
+    n_fail = sum(not f.ok for f in findings)
+    result = {"ok": n_fail == 0, "n_fail": n_fail,
+              "cells": len({f.cell for f in findings}), "rows": rows}
+    if out:
+        with open(out, "w") as fh:
+            json.dump(result, fh, indent=1)
+    return result
+
+
+def _retrace_sweep(cfg0, model, ev, quick: bool) -> list:
+    """Run each entry twice per cell with fresh same-shape data; cache
+    growth above cells x max_compiles means a leaked static argument."""
+    chunk = 32
+    backends = BACKENDS[:1] if quick else BACKENDS
+    entries = (C.get_entry("cep.run_engine"),
+               C.get_entry("cep.run_engine_chunk"))
+    budgets, measured = {}, {}
+    with T.CompileCounter(*entries) as cc:
+        for backend in backends:
+            cfg = dataclasses.replace(cfg0, backend=backend)
+            for _ in range(2):
+                eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+            for _ in range(2):
+                piece = jax.tree.map(lambda x: x[:chunk].copy(), ev)
+                eng.run_engine_chunk(cfg, model, piece,
+                                     eng.init_carry(cfg), jnp.int32(0))
+        jax.block_until_ready(eng.run_engine(cfg0, model, ev,
+                                             eng.init_carry(cfg0)))
+        for name in ("cep.run_engine", "cep.run_engine_chunk"):
+            fn, ctr = C.registry()[name]
+            # One compile budget per cell; run_engine's extra final call
+            # re-hits the first cell's cache, so no extra budget.
+            budgets[name] = len(backends) * (ctr.max_compiles or 1)
+            measured[name] = cc.compiles(fn)
+    return T.retrace_findings(measured, budgets, cell="retrace-sweep")

@@ -1,0 +1,339 @@
+"""Rule engine over compiled artifacts (DESIGN.md §11).
+
+Checks COMPILED representations, not runtime behavior: each entry point
+is traced to a jaxpr and lowered/compiled to optimized HLO, and rules
+assert invariants on both —
+
+  * jaxpr: primitive census (sort / callback primitives, structural
+    while/scan/cond counts) including every sub-jaxpr (cond branches,
+    scan bodies, pjit calls, Pallas kernel bodies);
+  * HLO text: banned op applications (``sort(``, callback custom-calls,
+    ``f64[`` types), the module header's ``input_output_alias`` table
+    (donation), per-op result bytes (gather budget — shape parsing
+    shared with ``launch.hlo_analysis``);
+  * ``compiled.memory_analysis()``: XLA temp-buffer bytes vs the
+    contract's allocation budget.
+
+Every rule yields a :class:`Finding` with pass/fail AND an evidence line
+(the offending HLO line or the measured number vs its budget), which is
+what ``driver.check_all`` writes into ANALYSIS.json.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+
+import jax
+
+from repro.analysis import contracts as C
+from repro.launch import hlo_analysis as HA
+
+# ---------------------------------------------------------------------------
+# Artifacts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Artifact:
+    """One entry point traced + compiled at one config cell."""
+    name: str                 # cell label, e.g. "run_engine[pallas/pspice]"
+    jaxpr: object             # ClosedJaxpr (None if tracing was skipped)
+    compiled: object          # jax Compiled (None for jaxpr-only checks)
+    hlo: str                  # optimized HLO long text ("" when uncompiled)
+    cfg: object = None        # the cell's EngineConfig (budget resolution)
+    n_events: int = 0
+    # Expected minimum input_output_alias pairs (the donated pytree's
+    # leaf count; 0 when the contract donates nothing).  Some donated
+    # leaves are legitimately unusable (layout changes), so the driver
+    # sets this to the count that MUST alias — the carry leaves.
+    min_alias_pairs: int = 0
+
+    _census: collections.Counter = None
+    _memory: object = None
+
+    @property
+    def census(self) -> collections.Counter:
+        if self._census is None:
+            self._census = (primitive_census(self.jaxpr)
+                            if self.jaxpr is not None
+                            else collections.Counter())
+        return self._census
+
+    @property
+    def memory(self):
+        if self._memory is None and self.compiled is not None:
+            try:
+                self._memory = self.compiled.memory_analysis()
+            except Exception:   # backend without memory_analysis support
+                self._memory = None
+        return self._memory
+
+
+def trace_artifact(fn, *args, static_argnums=(0,), name: str = "",
+                   cfg=None, n_events: int = 0, min_alias_pairs: int = 0,
+                   compile: bool = True) -> Artifact:
+    """Build the checkable artifact for one (entry point, cell) pair.
+
+    ``fn`` is a jitted entry point (``fn.lower`` must exist) whose
+    static arguments sit at ``static_argnums`` (the engine convention:
+    the EngineConfig leads).  With ``compile=False`` only the jaxpr view
+    is built — the cheap mode ``bench_engine.py`` uses to refuse
+    degraded baselines without paying a second XLA compile.
+    """
+    jaxpr = jax.make_jaxpr(fn, static_argnums=static_argnums)(*args)
+    compiled, hlo = None, ""
+    if compile:
+        compiled = fn.lower(*args).compile()
+        hlo = compiled.as_text()
+    if cfg is None and static_argnums:
+        cfg = args[static_argnums[0]]
+    return Artifact(name=name or getattr(fn, "__name__", "fn"),
+                    jaxpr=jaxpr, compiled=compiled, hlo=hlo, cfg=cfg,
+                    n_events=n_events, min_alias_pairs=min_alias_pairs)
+
+
+def primitive_census(jaxpr) -> collections.Counter:
+    """Count primitive applications across the jaxpr and EVERY sub-jaxpr
+    (cond branches, scan/while bodies, pjit calls, pallas_call kernels)."""
+    counts: collections.Counter = collections.Counter()
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            counts[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    walk(sub)
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return counts
+
+
+def _sub_jaxprs(v):
+    """Yield the plain Jaxprs nested inside one eqn param value."""
+    from jax.extend.core import ClosedJaxpr, Jaxpr
+    if isinstance(v, ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+
+
+# ---------------------------------------------------------------------------
+# HLO text helpers (shape parsing shared with launch.hlo_analysis)
+# ---------------------------------------------------------------------------
+
+# An HLO op application: "%name = <result types> opname(...)".  Evidence
+# wants the line; budgets want the result bytes via HA.parse_shape_bytes.
+def hlo_op_lines(hlo: str, op: str) -> list:
+    """Lines applying HLO op ``op`` (e.g. "sort", "gather").  Matches the
+    op at its application site only — names like ``%sort.1 = ...`` still
+    only match through the trailing ``(``, and fused-computation NAMES
+    (``%sorted_branch``) never do."""
+    pat = re.compile(rf"=\s*[^=\n]*\b{re.escape(op)}\(")
+    return [ln for ln in hlo.splitlines() if pat.search(ln)]
+
+
+_ALIAS_PAIR_RE = re.compile(r"\{[\d,\s]*\}:\s*\(")
+
+
+def hlo_alias_pairs(hlo: str) -> int:
+    """Count entries of the module header's ``input_output_alias`` table."""
+    head = hlo.split("\n", 1)[0]
+    m = re.search(r"input_output_alias=\{(.*?)\}, \w+=", head)
+    region = m.group(1) if m else head
+    if "input_output_alias" not in head:
+        return 0
+    return len(_ALIAS_PAIR_RE.findall(region))
+
+
+def _trunc(line: str, n: int = 160) -> str:
+    line = line.strip()
+    return line if len(line) <= n else line[: n - 3] + "..."
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    ok: bool
+    evidence: str
+    cell: str = ""
+
+    def row(self) -> dict:
+        return {"rule": self.rule, "cell": self.cell,
+                "status": "pass" if self.ok else "FAIL",
+                "evidence": self.evidence}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One machine-checked invariant.  ``established`` records which PR
+    made the property true (the provenance DESIGN.md §11 documents)."""
+    name: str
+    established: str
+    description: str
+    check: object           # (Artifact, Contract) -> list[Finding]
+
+    def run(self, art: Artifact, ctr: C.Contract) -> list:
+        out = self.check(art, ctr)
+        for f in out:
+            f.cell = f.cell or art.name
+        return out
+
+
+def _ok(rule, art, evidence):
+    return [Finding(rule, True, evidence, art.name)]
+
+
+def _fail(rule, art, evidence):
+    return [Finding(rule, False, evidence, art.name)]
+
+
+def _check_no_sort(art: Artifact, ctr: C.Contract) -> list:
+    if not ctr.no_sort:
+        return _ok("no-sort", art, "not required by contract")
+    n_jaxpr = art.census.get("sort", 0)
+    lines = hlo_op_lines(art.hlo, "sort")
+    if n_jaxpr or lines:
+        ev = lines[0] if lines else f"{n_jaxpr} sort eqn(s) in jaxpr"
+        return _fail("no-sort", art, _trunc(ev))
+    return _ok("no-sort", art, "0 sort ops (jaxpr + HLO)")
+
+
+_CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
+                   "host_callback_call", "outside_call")
+_CALLBACK_TARGET_RE = re.compile(
+    r'custom_call_target="[^"]*(callback|host)[^"]*"', re.IGNORECASE)
+
+
+def _check_no_callback(art: Artifact, ctr: C.Contract) -> list:
+    if not ctr.no_callback:
+        return _ok("no-callback", art, "not required by contract")
+    hit = [p for p in _CALLBACK_PRIMS if art.census.get(p, 0)]
+    if hit:
+        return _fail("no-callback", art, f"jaxpr primitives: {hit}")
+    for ln in art.hlo.splitlines():
+        if _CALLBACK_TARGET_RE.search(ln):
+            return _fail("no-callback", art, _trunc(ln))
+    return _ok("no-callback", art, "no host callbacks")
+
+
+def _check_no_f64(art: Artifact, ctr: C.Contract) -> list:
+    if not ctr.no_f64:
+        return _ok("no-f64", art, "not required by contract")
+    for ln in art.hlo.splitlines():
+        if "f64[" in ln or "c128[" in ln:
+            return _fail("no-f64", art, _trunc(ln))
+    return _ok("no-f64", art, "no f64/c128 types in HLO")
+
+
+def _check_control_flow(art: Artifact, ctr: C.Contract) -> list:
+    n_loop = art.census.get("while", 0) + art.census.get("scan", 0)
+    n_cond = art.census.get("cond", 0)
+    out = []
+    if ctr.max_while is not None:
+        ok = n_loop <= ctr.max_while
+        out.append(Finding(
+            "control-flow", ok,
+            f"while/scan count {n_loop} vs budget {ctr.max_while}"))
+    if ctr.max_cond is not None:
+        ok = n_cond <= ctr.max_cond
+        out.append(Finding(
+            "control-flow", ok,
+            f"cond count {n_cond} vs budget {ctr.max_cond}"))
+    return out or _ok("control-flow", art, "no budget declared")
+
+
+def _check_donation(art: Artifact, ctr: C.Contract) -> list:
+    if not ctr.donate:
+        return _ok("donation", art, "contract donates nothing")
+    pairs = hlo_alias_pairs(art.hlo)
+    need = art.min_alias_pairs
+    mem = art.memory
+    aliased = getattr(mem, "alias_size_in_bytes", 0) if mem else 0
+    if pairs < need:
+        return _fail(
+            "donation", art,
+            f"input_output_alias has {pairs} pair(s), contract "
+            f"donate={ctr.donate} needs >= {need} (broken donation "
+            f"doubles steady-state memory)")
+    return _ok("donation", art,
+               f"{pairs} alias pairs (>= {need}), {aliased} B aliased")
+
+
+def _check_temp_bytes(art: Artifact, ctr: C.Contract) -> list:
+    budget = ctr.budget("max_temp_bytes", art.cfg, art.n_events)
+    if budget is None:
+        return _ok("temp-bytes", art, "no budget declared")
+    mem = art.memory
+    if mem is None:
+        return _ok("temp-bytes", art, "memory_analysis unavailable")
+    t = int(mem.temp_size_in_bytes)
+    return [Finding("temp-bytes", t <= budget,
+                    f"XLA temp buffers {t} B vs budget {budget} B")]
+
+
+def _check_gather_bytes(art: Artifact, ctr: C.Contract) -> list:
+    budget = ctr.budget("max_gather_bytes", art.cfg, art.n_events)
+    if budget is None:
+        return _ok("gather-bytes", art, "no budget declared")
+    worst, worst_line = 0, ""
+    for op in ("gather", "scatter"):
+        for ln in hlo_op_lines(art.hlo, op):
+            b = HA.parse_shape_bytes(ln.split(f"{op}(")[0])
+            if b > worst:
+                worst, worst_line = b, ln
+    if worst > budget:
+        return _fail("gather-bytes", art,
+                     f"{worst} B result > budget {budget} B: "
+                     f"{_trunc(worst_line, 110)}")
+    return _ok("gather-bytes", art,
+               f"largest gather/scatter result {worst} B <= {budget} B")
+
+
+RULES = (
+    Rule("no-sort", "PR 3",
+         "No sort in the compiled hot path: the spawn allocator is O(N) "
+         "free-list compaction and Algorithm 2 is the histogram-"
+         "refinement select.", _check_no_sort),
+    Rule("no-callback", "PR 1",
+         "The event scan never leaves the device: no host callbacks / "
+         "outside calls in the compiled module.", _check_no_callback),
+    Rule("no-f64", "PR 1",
+         "All hot-path arithmetic is f32/i32; an accidental x64 "
+         "promotion doubles every store pass.", _check_no_f64),
+    Rule("control-flow", "PR 5",
+         "Structural while/scan and cond counts stay within the "
+         "declared budget — new data-dependent loops are how "
+         "O(N log N) work returns.", _check_control_flow),
+    Rule("donation", "PR 2",
+         "Donated carries / chunk buffers actually alias in the "
+         "compiled module (input_output_alias).", _check_donation),
+    Rule("temp-bytes", "PR 3",
+         "XLA temp-buffer bytes within the per-cell budget "
+         "(allocation-free hot path).", _check_temp_bytes),
+    Rule("gather-bytes", "PR 3",
+         "No single gather/scatter result larger than the flat-advance "
+         "budget (kills (P,N,C+1)-per-event temps).", _check_gather_bytes),
+)
+
+
+def run_rules(art: Artifact, ctr: C.Contract, rules=None,
+              extra_rules=()) -> list:
+    """Evaluate rules against one artifact.  Waived rules (legacy /
+    oracle paths, DESIGN.md §11) report as passing with the waiver as
+    evidence, so ANALYSIS.json shows the waiver instead of hiding it."""
+    out = []
+    for rule in tuple(RULES if rules is None else rules) + tuple(
+            extra_rules):
+        if rule.name in ctr.waived:
+            out.append(Finding(rule.name, True,
+                               f"waived by contract {ctr.name}", art.name))
+            continue
+        out.extend(rule.run(art, ctr))
+    return out

@@ -1,0 +1,112 @@
+"""Retrace guard (DESIGN.md §11): compilation counting as a contract.
+
+PR 4 established "the whole scenario sweep is 4 compiles total" — but as
+a comment.  This module turns it into a checked budget, two ways:
+
+* :class:`CompileCounter` — snapshots each jitted entry point's
+  ``_cache_size()`` and reports the DELTA, i.e. compilations that
+  happened inside the ``with`` block.  Calling an entry point twice with
+  fresh same-shape data must cost 1 compile; a leaked static argument (a
+  Python scalar reaching the traced side) costs one compile per VALUE
+  and blows any budget immediately.
+
+* :func:`count_traces` — a decorator for NON-jitted scan bodies
+  (``_step_lanes``, ``_run_block``): the wrapped Python body runs once
+  per trace, so a global counter of body executions IS a trace counter.
+  Unlike ``_cache_size()`` this also sees traces of functions that are
+  inlined into a caller's jit (no cache of their own).
+
+Both feed :func:`retrace_findings`, which converts measured counts into
+the same Finding rows the artifact rules emit.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+
+from repro.analysis.rules import Finding
+
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def count_traces(name: str):
+    """Count Python-body executions (= traces under jit) of ``fn``.
+
+    Zero steady-state cost: after the first trace per config cell the
+    wrapper never runs again — jit replays the cached computation.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            _TRACE_COUNTS[name] += 1
+            return fn(*args, **kw)
+        wrapper.__wrapped__ = fn
+        wrapper._trace_counter_name = name
+        return wrapper
+    return deco
+
+
+def trace_counts() -> dict:
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+def _cache_size(fn) -> int:
+    try:
+        return fn._cache_size()
+    except Exception:
+        return 0
+
+
+class CompileCounter:
+    """Measure compilations of jitted entry points across a sweep.
+
+        with CompileCounter(run_engine, run_engine_chunk) as cc:
+            ... run the {backend x shedder x chunked} sweep ...
+        cc.compiles(run_engine)   # executable-cache growth inside block
+    """
+
+    def __init__(self, *fns):
+        self._fns = fns
+        self._base = {}
+
+    def __enter__(self):
+        self._base = {id(f): _cache_size(f) for f in self._fns}
+        self._trace_base = dict(_TRACE_COUNTS)
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def compiles(self, fn) -> int:
+        return _cache_size(fn) - self._base.get(id(fn), 0)
+
+    def traces(self, name: str) -> int:
+        return _TRACE_COUNTS.get(name, 0) - self._trace_base.get(name, 0)
+
+
+def retrace_findings(measured: dict, budgets: dict, cell: str = "sweep",
+                     ) -> list:
+    """Findings for measured compile/trace counts vs per-entry budgets.
+
+    ``measured``: entry-point name -> compilations observed over the
+    sweep.  ``budgets``: name -> max allowed (entries missing a budget
+    are reported as informational passes — measured but unbounded).
+    """
+    out = []
+    for name, n in sorted(measured.items()):
+        budget = budgets.get(name)
+        if budget is None:
+            out.append(Finding("retrace", True,
+                               f"{name}: {n} compiles (no budget)", cell))
+            continue
+        out.append(Finding(
+            "retrace", n <= budget,
+            f"{name}: {n} compiles vs budget {budget}"
+            + ("" if n <= budget else
+               " (leaked static argument? shape-dependent Python "
+               "branch?)"), cell))
+    return out

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts as ctr
+from repro.analysis.tracing import count_traces
 from repro.cep import patterns as pat
 from repro.core import overload as ovl
 from repro.core import shedder as shd
@@ -686,6 +688,7 @@ def _pad_event_blocks(events: EventBatch, n: int, w: int,
     return jax.tree.map(f, events), nb
 
 
+@count_traces("cep._run_block")
 def _run_block(cfg: EngineConfig, model: EngineModel, carry: Carry,
                blk: tuple, i0: Array, n_valid: Array) -> tuple[Carry, dict]:
     """One event block through the fused kernel, splitting at shed fire
@@ -826,6 +829,7 @@ def _scan_events_lanes_backend(cfg: EngineConfig, model: EngineModel,
     return _scan_events_lanes(cfg, model, events, carry, start)
 
 
+@count_traces("cep._step_lanes")
 def _step_lanes(cfg: EngineConfig, model: EngineModel, carry: Carry,
                 ev: tuple) -> tuple[Carry, StepOut]:
     """Lane-batched event step for the multi-tenant runtime (DESIGN.md §7).
@@ -885,6 +889,10 @@ def _scan_events_lanes(cfg: EngineConfig, model: EngineModel,
     return carry, jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), outs)
 
 
+@ctr.contract("cep.run_engine",
+              max_while=12, max_cond=24, max_compiles=1,
+              max_temp_bytes=ctr.hot_path_temp_budget,
+              max_gather_bytes=ctr.hot_path_gather_budget)
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def run_engine(cfg: EngineConfig, model: EngineModel, events: EventBatch,
                carry: Carry) -> tuple[Carry, StepOut]:
@@ -906,6 +914,11 @@ def wrap_event_index(start) -> Array:
     return jnp.asarray(np.uint32(wrapped).astype(np.int32))
 
 
+@ctr.contract("cep.run_engine_chunk",
+              donate=("carry", "events"),
+              max_while=12, max_cond=24, max_compiles=2,
+              max_temp_bytes=ctr.hot_path_temp_budget,
+              max_gather_bytes=ctr.hot_path_gather_budget)
 @functools.partial(jax.jit, static_argnames=("cfg",),
                    donate_argnames=("carry", "events"))
 def run_engine_chunk(cfg: EngineConfig, model: EngineModel,

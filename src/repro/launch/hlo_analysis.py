@@ -43,6 +43,18 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
+def parse_shape_bytes(fragment: str) -> int:
+    """Total bytes of every typed shape in an HLO text fragment.
+
+    Shared with ``repro.analysis.rules`` (gather/scatter result budgets):
+    pass the result-type portion of an op line (everything left of the
+    op name) and get the summed byte size — tuple results sum their
+    elements, unknown dtypes are skipped."""
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(fragment)
+               if dt in _DTYPE_BYTES)
+
+
 @dataclasses.dataclass
 class CollectiveStats:
     """Per-device WIRE bytes (ring-algorithm volumes) by collective kind."""
@@ -175,8 +187,14 @@ def analyze(compiled, chips: int, model_flops: float = 0.0,
          ("collective", collective_s)), key=lambda kv: kv[1])[0]
     try:
         mem = compiled.memory_analysis()
+        # Peak live bytes: arguments + outputs + XLA temp buffers, MINUS
+        # the bytes where an output aliases a donated input (donation
+        # means those outputs occupy the argument's storage, not new
+        # memory — counting both would double the engine's carry, which
+        # is the dominant term for run_engine_chunk).
         per_dev = (getattr(mem, "argument_size_in_bytes", 0)
-                   + getattr(mem, "output_size_in_bytes", 0) * 0
+                   + getattr(mem, "output_size_in_bytes", 0)
+                   - getattr(mem, "alias_size_in_bytes", 0)
                    + getattr(mem, "temp_size_in_bytes", 0))
     except Exception:
         per_dev = 0

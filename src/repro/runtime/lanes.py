@@ -21,6 +21,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import contracts as ctr
 from repro.cep import engine as eng
 
 PyTree = Any
@@ -56,6 +57,8 @@ def init_lane_carries(cfg: eng.EngineConfig, n: int, seed: int = 0,
                   for i in range(n)])
 
 
+@ctr.contract("runtime.run_chunk_lanes", donate=("carry",),
+              max_while=12, max_cond=24, max_compiles=1)
 @functools.partial(jax.jit, static_argnames=("cfg",),
                    donate_argnames=("carry",))
 def run_chunk_lanes(cfg: eng.EngineConfig, model: eng.EngineModel,
@@ -79,6 +82,9 @@ def run_chunk_lanes(cfg: eng.EngineConfig, model: eng.EngineModel,
                                           start)
 
 
+@ctr.contract("runtime.run_chunk_lanes_donated",
+              donate=("carry", "events"),
+              max_while=12, max_cond=24, max_compiles=1)
 @functools.partial(jax.jit, static_argnames=("cfg",),
                    donate_argnames=("carry", "events"))
 def run_chunk_lanes_donated(cfg: eng.EngineConfig, model: eng.EngineModel,

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts as ctr
 from repro.cep import engine as eng
 from repro.cep import patterns as pat
 from repro.runtime import chunker, lanes as LN, refresh as RF, telemetry as TM
@@ -83,10 +84,16 @@ def _make_group_runner(scan_fn, chunk_axis: int):
     return run
 
 
-_run_group_single = _make_group_runner(eng._scan_events_backend,
-                                       chunk_axis=1)
-_run_group_lanes = _make_group_runner(eng._scan_events_lanes_backend,
-                                      chunk_axis=2)
+_run_group_single = ctr.contract(
+    "runtime._run_group_single", donate=("carry", "events"),
+    max_while=14, max_cond=24, max_compiles=2,
+    max_temp_bytes=ctr.hot_path_temp_budget,
+    max_gather_bytes=ctr.hot_path_gather_budget)(
+        _make_group_runner(eng._scan_events_backend, chunk_axis=1))
+_run_group_lanes = ctr.contract(
+    "runtime._run_group_lanes", donate=("carry", "events"),
+    max_while=14, max_cond=24, max_compiles=2)(
+        _make_group_runner(eng._scan_events_lanes_backend, chunk_axis=2))
 
 
 class StreamRuntime:

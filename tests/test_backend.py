@@ -185,25 +185,35 @@ class TestScenarioBackendParity:
 
 class TestNoSortInHotPath:
     """The compiled per-event step must contain no sort for the default
-    config — spawn allocation and both shed plans are sort-free."""
+    config — spawn allocation and both shed plans are sort-free.
+    Asserted through the repro.analysis rule API (DESIGN.md §11), the
+    same rule CI's check_all sweep evaluates."""
 
     @pytest.mark.parametrize("shedder",
                              [eng.SHED_PSPICE, eng.SHED_PMBL])
-    def test_compiled_hlo_has_no_sort(self, shedder):
+    def test_compiled_artifact_has_no_sort(self, shedder):
+        from repro import analysis as A
         cfg, model, ev = _setup("q1", n=64)
         cfg = dataclasses.replace(cfg, shedder=shedder)
-        hlo = jax.jit(
-            eng.run_engine, static_argnames=("cfg",)
-        ).lower(cfg, model, ev, eng.init_carry(cfg)).compile().as_text()
-        assert "sort(" not in hlo, f"sort found in {shedder} hot path"
+        art = A.trace_artifact(eng.run_engine, cfg, model, ev,
+                               eng.init_carry(cfg),
+                               name=f"no-sort[{shedder}]", n_events=64)
+        fs = [f for f in A.run_rules(
+            art, A.get_contract("cep.run_engine")) if f.rule == "no-sort"]
+        assert fs and all(f.ok for f in fs), [f.evidence for f in fs]
 
     def test_legacy_plan_does_sort(self):
-        """Sanity: the detector actually detects — the legacy config's
-        HLO must contain the sort the default config eliminated."""
+        """Positive control: the rule actually detects — the legacy
+        config's artifact must TRIP no-sort (both at the jaxpr and the
+        HLO level), proving the analyzer is live."""
+        from repro import analysis as A
         cfg, model, ev = _setup("q1", n=64)
         cfg = dataclasses.replace(cfg, spawn_alloc="argsort",
                                   shed_plan="sort")
-        hlo = jax.jit(
-            eng.run_engine, static_argnames=("cfg",)
-        ).lower(cfg, model, ev, eng.init_carry(cfg)).compile().as_text()
-        assert "sort(" in hlo
+        art = A.trace_artifact(eng.run_engine, cfg, model, ev,
+                               eng.init_carry(cfg), name="legacy",
+                               n_events=64)
+        fs = [f for f in A.run_rules(
+            art, A.get_contract("cep.run_engine")) if f.rule == "no-sort"]
+        assert fs and any(not f.ok for f in fs)
+        assert art.census.get("sort", 0) > 0

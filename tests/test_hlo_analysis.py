@@ -1,0 +1,109 @@
+"""launch.hlo_analysis parsing units (DESIGN.md §9, §11).
+
+parse_collectives feeds both the launch roofline and the analysis rule
+engine, so its regexes get canned-HLO unit coverage here: pair vs list
+replica-group forms, -start/-done dedup, tuple result types.  The
+analyze() per-device-memory term is checked against memory_analysis()
+directly — outputs must be INCLUDED net of donated aliasing (the
+``* 0`` bug that silently zeroed them).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as HA
+
+
+class TestParseCollectives:
+    def test_pair_form_replica_groups(self):
+        # all-gather over groups of 4: wire factor (g-1)/g on the
+        # RESULT bytes (128*256*4 = 131072).
+        line = ("  %ag.1 = f32[128,256]{1,0} all-gather(f32[128,64]{1,0} "
+                "%p0), replica_groups=[2,4], dimensions={1}")
+        st = HA.parse_collectives(line)
+        assert st.count_by_kind["all-gather"] == 1
+        expected = 128 * 256 * 4 * (4 - 1) / 4
+        assert st.bytes_by_kind["all-gather"] == pytest.approx(expected)
+
+    def test_list_form_replica_groups(self):
+        # Explicit groups {{0,1},{2,3}}: g=2, all-reduce factor 2(g-1)/g.
+        line = ("  %ar.3 = f32[1024]{0} all-reduce(f32[1024]{0} %x), "
+                "replica_groups={{0,1},{2,3}}, to_apply=%add")
+        st = HA.parse_collectives(line)
+        expected = 1024 * 4 * 2.0 * (2 - 1) / 2
+        assert st.bytes_by_kind["all-reduce"] == pytest.approx(expected)
+
+    def test_start_done_counted_once(self):
+        hlo = "\n".join([
+            "  %ar-start.1 = f32[512]{0} all-reduce-start(f32[512]{0} "
+            "%p), replica_groups=[1,8], to_apply=%add",
+            "  %ar-done.1 = f32[512]{0} all-reduce-done(f32[512]{0} "
+            "%ar-start.1)",
+        ])
+        st = HA.parse_collectives(hlo)
+        assert st.count_by_kind["all-reduce"] == 1
+        expected = 512 * 4 * 2.0 * (8 - 1) / 8
+        assert st.bytes_by_kind["all-reduce"] == pytest.approx(expected)
+
+    def test_tuple_result_sums_elements(self):
+        line = ("  %a2a = (f32[64]{0}, f32[64]{0}) all-to-all("
+                "f32[64]{0} %a, f32[64]{0} %b), replica_groups=[1,2], "
+                "dimensions={0}")
+        st = HA.parse_collectives(line)
+        expected = 2 * 64 * 4 * (2 - 1) / 2
+        assert st.bytes_by_kind["all-to-all"] == pytest.approx(expected)
+
+    def test_non_collective_lines_ignored(self):
+        hlo = "\n".join([
+            "  %x = f32[8]{0} add(f32[8]{0} %a, f32[8]{0} %b)",
+            "  %allgatherish = f32[8]{0} fusion(f32[8]{0} %c)",
+        ])
+        st = HA.parse_collectives(hlo)
+        assert st.total_bytes == 0
+
+
+class TestParseShapeBytes:
+    def test_single_and_tuple(self):
+        assert HA.parse_shape_bytes("f32[128,64]{1,0}") == 128 * 64 * 4
+        assert HA.parse_shape_bytes(
+            "(s32[16]{0}, pred[16]{0})") == 16 * 4 + 16
+        assert HA.parse_shape_bytes("scalar f32[]") == 4
+        assert HA.parse_shape_bytes("no shapes here") == 0
+
+
+class TestAnalyzePerDeviceMem:
+    def test_outputs_counted_net_of_aliasing(self):
+        """per_device_mem = args + outputs - aliased + temps: outputs
+        are INCLUDED (the old `* 0` silently dropped them) but donated
+        aliases aren't double-counted."""
+        f = jax.jit(lambda x: (x + 1.0, jnp.sum(x)), donate_argnums=0)
+        x = jnp.zeros((4096,), jnp.float32)
+        compiled = f.lower(x).compile()
+        roof = HA.analyze(compiled, chips=1)
+        mem = compiled.memory_analysis()
+        expected = (mem.argument_size_in_bytes
+                    + mem.output_size_in_bytes
+                    - mem.alias_size_in_bytes
+                    + mem.temp_size_in_bytes)
+        assert roof.per_device_mem == expected
+        # The donated 16 KiB x is reused for the output: net must be
+        # strictly below the double-counted sum but still include the
+        # non-aliased output scalar.
+        assert roof.per_device_mem < (mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes)
+        assert mem.output_size_in_bytes > 0
+
+    def test_undonated_outputs_fully_counted(self):
+        g = jax.jit(lambda x: x * 2.0)
+        x = jnp.ones((1024,), jnp.float32)
+        compiled = g.lower(x).compile()
+        roof = HA.analyze(compiled, chips=1)
+        mem = compiled.memory_analysis()
+        assert np.isclose(roof.per_device_mem,
+                          mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes
+                          + mem.temp_size_in_bytes
+                          - mem.alias_size_in_bytes)
+        assert roof.per_device_mem >= mem.output_size_in_bytes
