@@ -133,6 +133,58 @@ class EngineConfig:
         if self.block_events < 1:
             raise ValueError(
                 f"block_events must be >= 1: {self.block_events}")
+        for name in ("num_patterns", "max_states", "max_classes",
+                     "max_pms", "max_any_ids", "ring_size"):
+            v = getattr(self, name)
+            if v < 1:
+                raise ValueError(
+                    f"{name} must be >= 1 (it sizes a store/table axis): "
+                    f"{v}")
+        if not self.latency_bound > 0:
+            raise ValueError(
+                "latency_bound must be > 0 seconds — the overload "
+                "detector (Alg. 1) compares realized event latency l_e "
+                f"against it: {self.latency_bound}")
+        if self.safety_buffer < 0:
+            raise ValueError(
+                "safety_buffer must be >= 0 seconds (it tightens the "
+                f"latency bound, never loosens it): {self.safety_buffer}")
+        for name in ("c_base", "c_match", "c_shed_base", "c_shed_pm",
+                     "c_ebl"):
+            v = getattr(self, name)
+            if v < 0:
+                raise ValueError(
+                    f"cost constant {name} must be >= 0 seconds (simulated-"
+                    f"time costs are non-negative): {v}")
+        for name in ("ebl_floor", "ebl_decay"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(
+                    f"{name} must be in [0, 1] (it scales/decays the E-BL "
+                    f"drop fraction): {v}")
+        if self.ebl_backlog_gain < 0:
+            raise ValueError(
+                "ebl_backlog_gain must be >= 0 (backlog-proportional term "
+                f"of the E-BL drop controller): {self.ebl_backlog_gain}")
+        if self.shedder not in (SHED_NONE, SHED_PSPICE, SHED_PMBL,
+                                SHED_EBL):
+            raise ValueError(
+                f"unknown shedder {self.shedder!r}; expected one of "
+                f"('{SHED_NONE}', '{SHED_PSPICE}', '{SHED_PMBL}', "
+                f"'{SHED_EBL}')")
+        if self.spawn_alloc not in ("cumsum", "argsort"):
+            raise ValueError(f"unknown spawn_alloc {self.spawn_alloc!r}; "
+                             "expected 'cumsum' or 'argsort'")
+        if self.shed_plan not in ("threshold", "sort"):
+            raise ValueError(f"unknown shed_plan {self.shed_plan!r}; "
+                             "expected 'threshold' or 'sort'")
+        if self.kinds not in ("seq", "any", "mixed"):
+            raise ValueError(f"unknown kinds census {self.kinds!r}; "
+                             "expected 'seq', 'any' or 'mixed'")
+        if self.spawn_modes not in ("at_open", "in_windows", "mixed"):
+            raise ValueError(
+                f"unknown spawn_modes census {self.spawn_modes!r}; "
+                "expected 'at_open', 'in_windows' or 'mixed'")
 
     @property
     def flat_pms(self) -> int:

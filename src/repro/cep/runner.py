@@ -172,8 +172,13 @@ class ExperimentResult:
 
     @property
     def lb_violations(self) -> float:
-        """Fraction of events whose latency exceeded the configured bound."""
-        return float((self.result.l_e > self.latency_bound).mean())
+        """Fraction of events whose latency exceeded the configured bound.
+        An empty run (zero events) violated nothing — the unguarded
+        ``mean()`` of an empty array would be NaN."""
+        l_e = np.asarray(self.result.l_e)
+        if l_e.size == 0:
+            return 0.0
+        return float((l_e > self.latency_bound).mean())
 
     @property
     def lb_compliance(self) -> float:

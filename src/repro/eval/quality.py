@@ -131,6 +131,11 @@ def degradation_point(res, gt_res, weights=None,
                       latency_bound: float = 1.0) -> dict:
     """One point of a degradation curve: quality + load metrics of a
     shedder run (``RunResult`` with matches) vs its ground truth."""
+    if res.matches is None or gt_res.matches is None:
+        raise ValueError(
+            "degradation_point needs match sets on both runs — run with "
+            "cfg.emit_matches=True (extract_matches) so the FN ratio can "
+            "be computed against the ground truth")
     rep = compare_match_sets(res.matches, gt_res.matches, weights)
     return {
         "fn_ratio": rep.fn_ratio,

@@ -3,10 +3,21 @@
 The layer between the engine (one scan) and the serving surfaces:
 chunked ingestion with a donated carry (constant-memory unbounded
 streams), online Markov/utility model refresh between chunks, vmapped
-tenant lanes, and per-chunk telemetry.  See DESIGN.md §7.
+tenant lanes, per-chunk telemetry, and the resilience layer (bounded
+admission front-end, degradation ladder, carry guard/recovery, fault
+injection).  See DESIGN.md §7, §8, §12.
 """
 from repro.runtime.chunker import (ChunkBuffer, concat_events, iter_chunks,
                                    num_events, slice_events)
+from repro.runtime.faults import (FAULT_KINDS, STATE_FAULTS, STREAM_FAULTS,
+                                  FaultConfig, FaultInjector)
+from repro.runtime.guard import (CARRY_CHECKS, MODEL_CHECKS, CarryGuard,
+                                 GuardConfig, GuardViolation,
+                                 carry_check_lanes, carry_check_vec,
+                                 model_check_lanes, model_check_vec,
+                                 trim_store, trim_store_lanes)
+from repro.runtime.ingest import (AdmitReport, IngestConfig, IngestFrontEnd,
+                                  IngestQueue, neutral_like, take_rows)
 from repro.runtime.lanes import (broadcast_model, init_lane_carries,
                                  num_lanes, run_chunk_lanes,
                                  run_chunk_lanes_donated, stack,
@@ -14,20 +25,34 @@ from repro.runtime.lanes import (broadcast_model, init_lane_carries,
 from repro.runtime.refresh import (RefreshConfig, RefreshState,
                                    prepare_model, refit_latency_model,
                                    refresh_model, table_width)
-from repro.runtime.service import (MultiTenantRuntime, RuntimeConfig,
+from repro.runtime.service import (RUNG_INPUT_SHED, RUNG_NAMES, RUNG_NORMAL,
+                                   RUNG_PM_TRIM, RUNG_QUARANTINE,
+                                   DegradationLadder, LadderConfig,
+                                   MultiTenantRuntime, RuntimeConfig,
                                    StreamRuntime)
-from repro.runtime.telemetry import (ChunkStats, TelemetryLog,
+from repro.runtime.telemetry import (ChunkStats, RuntimeEvent, TelemetryLog,
                                      counter_snapshot, device_chunk_stats,
                                      summarize_chunk)
 
 __all__ = [
     "ChunkBuffer", "concat_events", "iter_chunks", "num_events",
-    "slice_events", "broadcast_model", "init_lane_carries", "num_lanes",
+    "slice_events",
+    "FAULT_KINDS", "STATE_FAULTS", "STREAM_FAULTS", "FaultConfig",
+    "FaultInjector",
+    "CARRY_CHECKS", "MODEL_CHECKS", "CarryGuard", "GuardConfig",
+    "GuardViolation", "carry_check_lanes", "carry_check_vec",
+    "model_check_lanes", "model_check_vec", "trim_store",
+    "trim_store_lanes",
+    "AdmitReport", "IngestConfig", "IngestFrontEnd", "IngestQueue",
+    "neutral_like", "take_rows",
+    "broadcast_model", "init_lane_carries", "num_lanes",
     "run_chunk_lanes", "run_chunk_lanes_donated", "stack", "unstack_lane",
     "RefreshConfig",
     "RefreshState", "prepare_model", "refit_latency_model", "refresh_model",
     "table_width",
+    "RUNG_INPUT_SHED", "RUNG_NAMES", "RUNG_NORMAL", "RUNG_PM_TRIM",
+    "RUNG_QUARANTINE", "DegradationLadder", "LadderConfig",
     "MultiTenantRuntime", "RuntimeConfig", "StreamRuntime", "ChunkStats",
-    "TelemetryLog", "counter_snapshot", "device_chunk_stats",
-    "summarize_chunk",
+    "RuntimeEvent", "TelemetryLog", "counter_snapshot",
+    "device_chunk_stats", "summarize_chunk",
 ]

@@ -1,0 +1,231 @@
+"""Deterministic fault injection for chaos runs (DESIGN.md §12).
+
+Every fault a resilient front-end must survive, as a SEEDED, REPLAYABLE
+transformation: stream faults rewrite an ``EventBatch`` before it is
+offered to the runtime (bursts, duplicates, reordering, stalls), state
+faults corrupt the live carry or model between chunks (NaN/Inf into the
+refresh accumulators or utility tables, latency spikes, lane poison).
+All randomness comes from one ``np.random.default_rng(seed)``, and every
+applied fault is appended to ``FaultInjector.log`` — two injectors with
+the same seed and call sequence produce bit-identical chaos, which is
+what lets ``benchmarks/bench_faults.py`` gate CI on exact outcomes.
+
+Stream faults preserve the arrival-time monotonicity the engine's
+simulated-time model assumes (a burst COMPRESSES gaps, a stall inserts a
+silence then a pile-up); what they stress is the rate the admission
+controller and shedder see, not the data-layer contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cep import engine as eng
+from repro.runtime.chunker import num_events
+
+STREAM_FAULTS = ("burst", "duplicate", "reorder", "stall")
+STATE_FAULTS = ("nan_refresh", "table_corrupt", "lane_poison",
+                "latency_spike")
+FAULT_KINDS = STREAM_FAULTS + STATE_FAULTS
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    kinds: tuple[str, ...] = FAULT_KINDS
+    seed: int = 0
+    p_fault: float = 0.5       # per-call chance each enabled fault fires
+    burst_factor: float = 8.0  # arrival-gap compression inside a burst
+    burst_len: int = 256
+    dup_len: int = 64
+    reorder_len: int = 128
+    stall_gap_s: float = 0.5   # silence inserted before the pile-up
+    spike_s: float = 0.25      # sim-time jump for latency_spike
+    nan_frac: float = 0.02     # fraction of entries corrupted to NaN/Inf
+
+    def __post_init__(self):
+        unknown = set(self.kinds) - set(FAULT_KINDS)
+        if unknown:
+            raise ValueError(f"unknown fault kinds {sorted(unknown)}; "
+                             f"expected a subset of {FAULT_KINDS}")
+        if not 0.0 <= self.p_fault <= 1.0:
+            raise ValueError("faults.p_fault is a probability and must be "
+                             f"in [0, 1]: {self.p_fault}")
+        if not 0.0 < self.nan_frac <= 1.0:
+            raise ValueError("faults.nan_frac must be in (0, 1]: "
+                             f"{self.nan_frac}")
+
+
+def _np_leaves(events: eng.EventBatch) -> eng.EventBatch:
+    return jax.tree.map(lambda x: np.array(x), events)
+
+
+class FaultInjector:
+    """Seeded source of stream/state faults with a replay log."""
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.log: list[dict] = []
+        self._call = 0
+
+    def _fires(self, kind: str) -> bool:
+        # The rng draw happens for every ENABLED kind so the stream of
+        # random numbers — and hence the replay — depends only on cfg.
+        return kind in self.cfg.kinds \
+            and self.rng.random() < self.cfg.p_fault
+
+    def _note(self, kind: str, **detail) -> None:
+        self.log.append({"call": self._call, "kind": kind, **detail})
+
+    # -- stream faults -----------------------------------------------------
+    def corrupt_events(self, events: eng.EventBatch,
+                       axis: int = 0) -> eng.EventBatch:
+        """Apply whichever enabled stream faults fire to one push batch.
+        ``axis`` is the event axis (1 for lane-stacked batches; lane
+        leaves share the fault, like a front-end-wide hiccup would)."""
+        self._call += 1
+        n = num_events(events, axis)
+        if n < 4:
+            return events
+        ev = _np_leaves(events)
+        # arrival's event axis is its LAST for both layouts ((n,) / (L, n))
+        # so the burst/stall transforms below can index axis=-1.
+        arrival = np.array(ev.arrival)
+        if self._fires("duplicate"):
+            m = min(self.cfg.dup_len, n // 2)
+            s = int(self.rng.integers(0, n - m))
+            # Each event of the window delivered twice IN PLACE, so the
+            # duplicated arrivals stay monotone (at-least-once delivery).
+            idx = np.concatenate([np.arange(0, s),
+                                  np.repeat(np.arange(s, s + m), 2),
+                                  np.arange(s + m, n)])
+            ev = _take_rows(ev, idx, axis)
+            arrival = np.array(ev.arrival)
+            n = idx.size
+            self._note("duplicate", start=s, len=m)
+        if self._fires("reorder"):
+            m = min(self.cfg.reorder_len, n // 2)
+            s = int(self.rng.integers(0, n - m))
+            perm = np.arange(n)
+            perm[s:s + m] = s + self.rng.permutation(m)
+            # Reorder payloads only; arrivals keep their monotone order
+            # (out-of-order CONTENT at in-order timestamps).
+            old_arrival = arrival.copy()
+            ev = _take_rows(ev, perm, axis)
+            ev = ev._replace(arrival=old_arrival)
+            arrival = old_arrival
+            self._note("reorder", start=s, len=m)
+        if self._fires("burst"):
+            m = min(self.cfg.burst_len, n // 2)
+            s = int(self.rng.integers(0, n - m))
+            arrival = _compress_gaps(arrival, s, m, self.cfg.burst_factor)
+            ev = ev._replace(arrival=arrival)
+            self._note("burst", start=s, len=m,
+                       factor=self.cfg.burst_factor)
+        if self._fires("stall"):
+            m = min(self.cfg.burst_len, n // 2)
+            s = int(self.rng.integers(0, n - m))
+            arrival = _stall(arrival, s, m, self.cfg.stall_gap_s)
+            ev = ev._replace(arrival=arrival)
+            self._note("stall", start=s, len=m, gap=self.cfg.stall_gap_s)
+        return jax.tree.map(jnp.asarray, ev)
+
+    # -- state faults ------------------------------------------------------
+    def corrupt_carry(self, carry: eng.Carry,
+                      lane: int | None = None) -> eng.Carry:
+        """Whichever enabled carry faults fire, applied between chunks.
+        ``lane`` targets one lane of a lane-stacked carry."""
+        self._call += 1
+        at = (lambda x, v: x.at[lane].set(v)) if lane is not None \
+            else (lambda x, v: jnp.asarray(v, x.dtype))
+        if self._fires("nan_refresh"):
+            oc = np.array(carry.obs_counts if lane is None
+                          else carry.obs_counts[lane])
+            flat = oc.reshape(-1)
+            k = max(1, int(self.cfg.nan_frac * flat.size))
+            flat[self.rng.choice(flat.size, size=k, replace=False)] = np.nan
+            carry = carry._replace(
+                obs_counts=carry.obs_counts.at[lane].set(oc)
+                if lane is not None else jnp.asarray(oc))
+            ring = np.array(carry.lat_samples_l if lane is None
+                            else carry.lat_samples_l[lane])
+            ring[self.rng.integers(0, ring.shape[-1])] = np.inf
+            carry = carry._replace(
+                lat_samples_l=carry.lat_samples_l.at[lane].set(ring)
+                if lane is not None else jnp.asarray(ring))
+            self._note("nan_refresh", lane=lane, n_nan=k)
+        if self._fires("latency_spike"):
+            st = carry.sim_time[lane] if lane is not None \
+                else carry.sim_time
+            carry = carry._replace(
+                sim_time=at(carry.sim_time, st + self.cfg.spike_s))
+            self._note("latency_spike", lane=lane, spike=self.cfg.spike_s)
+        if self._fires("lane_poison"):
+            carry = carry._replace(
+                sim_time=at(carry.sim_time, jnp.nan),
+                ema_gap=at(carry.ema_gap, jnp.nan))
+            self._note("lane_poison", lane=lane)
+        return carry
+
+    def corrupt_model(self, model: eng.EngineModel,
+                      lane: int | None = None) -> eng.EngineModel:
+        """NaN/Inf into the deployed utility tables + latency regression
+        (what a bad refresh would deploy if the gate missed it)."""
+        self._call += 1
+        if not self._fires("table_corrupt"):
+            return model
+        ut = np.array(model.ut_tables if lane is None
+                      else model.ut_tables[lane])
+        flat = ut.reshape(-1)
+        k = max(1, int(self.cfg.nan_frac * flat.size))
+        pick = self.rng.choice(flat.size, size=k, replace=False)
+        flat[pick[::2]] = np.nan
+        flat[pick[1::2]] = np.inf
+        model = model._replace(
+            ut_tables=model.ut_tables.at[lane].set(ut)
+            if lane is not None else jnp.asarray(ut))
+        f = model.f_model
+        bad_a = f.a.at[lane].set(jnp.nan) if lane is not None \
+            else jnp.full_like(f.a, jnp.nan)
+        model = model._replace(
+            f_model=type(f)(a=bad_a, b=f.b, kind=f.kind))
+        self._note("table_corrupt", lane=lane, n_bad=k)
+        return model
+
+
+def _take_rows(ev: eng.EventBatch, idx: np.ndarray,
+               axis: int) -> eng.EventBatch:
+    return jax.tree.map(lambda x: np.take(x, idx, axis=axis), ev)
+
+
+def _compress_gaps(arrival: np.ndarray, s: int, m: int,
+                   factor: float) -> np.ndarray:
+    """Divide inter-arrival gaps inside [s, s+m) by ``factor`` and shift
+    the tail down so the sequence stays monotone — an instantaneous rate
+    multiplication, the paper's canonical overload."""
+    a = arrival.copy()
+    seg = np.take(a, np.arange(s, s + m), axis=-1)
+    first = np.take(seg, [0], axis=-1)
+    compressed = first + (seg - first) / factor
+    delta = np.take(seg, [-1], axis=-1) - np.take(compressed, [-1], axis=-1)
+    idx_seg = [slice(None)] * (a.ndim - 1) + [slice(s, s + m)]
+    idx_tail = [slice(None)] * (a.ndim - 1) + [slice(s + m, None)]
+    a[tuple(idx_seg)] = compressed
+    a[tuple(idx_tail)] = a[tuple(idx_tail)] - delta
+    return a
+
+
+def _stall(arrival: np.ndarray, s: int, m: int, gap: float) -> np.ndarray:
+    """A silence of ``gap`` seconds at index ``s``, then the stalled
+    events arrive in a pile-up (all at once), then the stream resumes
+    shifted — what a stuck upstream producer looks like."""
+    a = arrival.copy()
+    idx_seg = [slice(None)] * (a.ndim - 1) + [slice(s, s + m)]
+    idx_tail = [slice(None)] * (a.ndim - 1) + [slice(s + m, None)]
+    pile = np.take(a, [s], axis=-1) + gap
+    a[tuple(idx_seg)] = np.broadcast_to(pile, a[tuple(idx_seg)].shape)
+    a[tuple(idx_tail)] = a[tuple(idx_tail)] + gap
+    return a

@@ -1,0 +1,226 @@
+"""Carry/model invariant guard + checkpoint/restore (DESIGN.md §12).
+
+The engine's carry is donated into every chunk: one NaN that slips in —
+a poisoned refresh, a corrupted table, broken input — contaminates every
+subsequent chunk and is unrecoverable, because the pre-fault buffers no
+longer exist.  The guard makes corruption (a) DETECTABLE at chunk-group
+granularity via one fused on-device check that crosses to the host as a
+handful of booleans, and (b) RECOVERABLE via periodic host-side carry +
+model checkpoints (true copies — the live arrays are donation fodder).
+
+Checks are intentionally cheap (all-reduces over arrays the chunk just
+touched) and derive every bound from the pytree leaves themselves, so
+one jitted function serves any config and vmaps over tenant lanes.
+Checks run BEFORE checkpointing, so a poisoned state is never saved.
+
+``trim_store`` is the degradation ladder's PM-trim rung: a between-chunk
+invocation of the engine's own Algorithm-2 shed path (`eng._shed_now`)
+dropping a fixed fraction of active PMs, paying the same simulated shed
+cost and bumping the same counters as an in-scan shed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cep import engine as eng
+
+# Check-vector slot names — the single place that orders them.
+CARRY_CHECKS = ("finite_time", "finite_latency_ring", "store_consistent",
+                "counters_sane", "finite_obs")
+MODEL_CHECKS = ("finite_tables", "finite_latency_model", "finite_params")
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    check_every_chunks: int = 1       # invariant-check cadence
+    checkpoint_every_chunks: int = 8  # checkpoint cadence (on clean checks)
+    restore_on_violation: bool = True
+    quarantine_offers: int = 2        # lane quarantine length after restore
+
+    def __post_init__(self):
+        if self.check_every_chunks < 1:
+            raise ValueError("guard.check_every_chunks must be >= 1: "
+                             f"{self.check_every_chunks}")
+        if self.checkpoint_every_chunks < 1:
+            raise ValueError("guard.checkpoint_every_chunks must be >= 1: "
+                             f"{self.checkpoint_every_chunks}")
+        if self.quarantine_offers < 0:
+            raise ValueError("guard.quarantine_offers must be >= 0: "
+                             f"{self.quarantine_offers}")
+
+
+def _all_finite(*xs) -> jax.Array:
+    return jnp.stack([jnp.isfinite(x).all() for x in xs]).all()
+
+
+def _carry_checks(carry: eng.Carry) -> jax.Array:
+    """(len(CARRY_CHECKS),) bool vector; every bound derived from leaf
+    shapes so the same trace serves any config and vmaps over lanes."""
+    pms = carry.pms
+    M = carry.obs_counts.shape[-1]
+    K = carry.ring.shape[-1]
+    finite_time = _all_finite(carry.sim_time, carry.prev_arrival,
+                              carry.ema_gap) & (carry.ema_gap > 0)
+    finite_ring = _all_finite(carry.lat_samples_n, carry.lat_samples_l)
+    # Active PMs must hold a representable automaton state; ring pointers
+    # must index the ring.  (Inactive slots may hold stale garbage.)
+    state_ok = jnp.where(pms.active,
+                         (pms.state >= 1) & (pms.state <= M), True).all()
+    ptr_ok = ((carry.ring_ptr >= 0) & (carry.ring_ptr < K)).all()
+    nonneg = lambda x: jnp.isfinite(x).all() & (x >= 0).all()  # noqa: E731
+    counters_ok = (nonneg(carry.complex_count) & nonneg(carry.pms_created)
+                   & nonneg(carry.pms_shed) & nonneg(carry.shed_calls)
+                   & nonneg(carry.overflow) & nonneg(carry.ebl_dropped)
+                   & (carry.ebl_frac >= 0).all()
+                   & (carry.ebl_frac <= 1).all())
+    finite_obs = _all_finite(carry.obs_counts, carry.obs_rewards)
+    return jnp.stack([finite_time, finite_ring, state_ok & ptr_ok,
+                      counters_ok, finite_obs])
+
+
+def _model_checks(model: eng.EngineModel) -> jax.Array:
+    """(len(MODEL_CHECKS),) bool vector for the deployed model."""
+    finite_tables = (jnp.isfinite(model.ut_tables).all()
+                     & (model.ut_bins >= 1).all())
+    finite_lat = _all_finite(model.f_model.a, model.f_model.b,
+                             model.g_model.a, model.g_model.b)
+    finite_params = _all_finite(model.proc_cost, model.ebl_raw_mean)
+    return jnp.stack([finite_tables, finite_lat, finite_params])
+
+
+carry_check_vec = jax.jit(_carry_checks)
+model_check_vec = jax.jit(_model_checks)
+carry_check_lanes = jax.jit(jax.vmap(_carry_checks))
+model_check_lanes = jax.jit(jax.vmap(_model_checks))
+
+
+def _trim_one(cfg: eng.EngineConfig, model: eng.EngineModel,
+              carry: eng.Carry, i: jax.Array, frac: jax.Array) -> eng.Carry:
+    n_active = carry.pms.active.sum().astype(jnp.float32)
+    rho = jnp.ceil(frac * n_active).astype(jnp.int32)
+    return eng._shed_now(cfg, model, carry, i, rho)[0]
+
+
+trim_store = jax.jit(_trim_one, static_argnames=("cfg",))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def trim_store_lanes(cfg: eng.EngineConfig, model: eng.EngineModel,
+                     carry: eng.Carry, i: jax.Array,
+                     frac: jax.Array) -> eng.Carry:
+    return jax.vmap(lambda m, c: _trim_one(cfg, m, c, i, frac))(model,
+                                                                carry)
+
+
+@dataclasses.dataclass
+class GuardViolation:
+    scope: str              # "carry" | "model"
+    failed: list[str]       # CARRY_CHECKS / MODEL_CHECKS names that failed
+    lane: int | None = None
+
+    def to_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _host_copy(tree):
+    """True host copies of every leaf — the live arrays are donated into
+    the next chunk, so ``np.asarray`` (possibly zero-copy on CPU) is NOT
+    safe here."""
+    return jax.tree.map(lambda x: np.array(x), tree)
+
+
+def _to_device(tree):
+    return jax.tree.map(jnp.asarray, tree)
+
+
+class CarryGuard:
+    """Invariant checks + last-good checkpoint for one runtime's state.
+
+    ``lanes=None`` guards a single-tenant carry; ``lanes=L`` expects
+    lane-stacked carry/model pytrees and checks/restores PER LANE, so one
+    poisoned tenant never resets its neighbors.
+    """
+
+    def __init__(self, cfg: GuardConfig, lanes: int | None = None):
+        self.cfg = cfg
+        self.lanes = lanes
+        self._ckpt: tuple | None = None   # (carry_np, model_np, chunk_i)
+        self.checks_run = 0
+        self.violations = 0
+        self.restores = 0
+        self.checkpoints = 0
+
+    @property
+    def has_checkpoint(self) -> bool:
+        return self._ckpt is not None
+
+    @property
+    def checkpoint_chunk(self) -> int | None:
+        return None if self._ckpt is None else self._ckpt[2]
+
+    def save(self, carry: eng.Carry, model: eng.EngineModel,
+             chunk_i: int) -> None:
+        self._ckpt = (_host_copy(carry), _host_copy(model), chunk_i)
+        self.checkpoints += 1
+
+    def check(self, carry: eng.Carry,
+              model: eng.EngineModel) -> list[GuardViolation]:
+        """Run the fused on-device checks; returns [] when healthy."""
+        self.checks_run += 1
+        out: list[GuardViolation] = []
+        if self.lanes is None:
+            cv = np.asarray(carry_check_vec(carry))
+            mv = np.asarray(model_check_vec(model))
+            if not cv.all():
+                out.append(GuardViolation("carry", [
+                    CARRY_CHECKS[i] for i in np.nonzero(~cv)[0]]))
+            if not mv.all():
+                out.append(GuardViolation("model", [
+                    MODEL_CHECKS[i] for i in np.nonzero(~mv)[0]]))
+        else:
+            cv = np.asarray(carry_check_lanes(carry))
+            mv = np.asarray(model_check_lanes(model))
+            for lane in range(self.lanes):
+                if not cv[lane].all():
+                    out.append(GuardViolation("carry", [
+                        CARRY_CHECKS[i]
+                        for i in np.nonzero(~cv[lane])[0]], lane=lane))
+                if not mv[lane].all():
+                    out.append(GuardViolation("model", [
+                        MODEL_CHECKS[i]
+                        for i in np.nonzero(~mv[lane])[0]], lane=lane))
+        self.violations += len(out)
+        return out
+
+    def restore(self, carry: eng.Carry, model: eng.EngineModel,
+                lanes: list[int] | None = None
+                ) -> tuple[eng.Carry, eng.EngineModel]:
+        """Reset state from the last good checkpoint.  With ``lanes`` only
+        those lanes roll back (lane-stacked pytrees); everyone else keeps
+        their live state bit-for-bit."""
+        if self._ckpt is None:
+            raise RuntimeError("CarryGuard.restore called before any "
+                               "checkpoint was saved")
+        ck_carry, ck_model, _ = self._ckpt
+        self.restores += 1
+        if lanes is None or self.lanes is None:
+            return _to_device(ck_carry), _to_device(ck_model)
+
+        def merge(cur, ck):
+            host = np.array(cur)
+            host[np.asarray(lanes)] = ck[np.asarray(lanes)]
+            return jnp.asarray(host)
+
+        return (jax.tree.map(merge, carry, ck_carry),
+                jax.tree.map(merge, model, ck_model))
+
+    def counters(self) -> dict:
+        return {"checks_run": self.checks_run,
+                "violations": self.violations,
+                "restores": self.restores,
+                "checkpoints": self.checkpoints}

@@ -48,6 +48,7 @@ class RefreshState:
     refresh_count: int = 0
     skipped_drift: int = 0
     skipped_obs: int = 0
+    skipped_nonfinite: int = 0   # NaN-safe gate fired (DESIGN.md §12)
 
 
 def table_width(specs: Sequence[pat.PatternSpec], bin_size: int) -> int:
@@ -125,7 +126,15 @@ def refresh_model(specs: Sequence[pat.PatternSpec], cfg: eng.EngineConfig,
     observation accumulators decayed by ``rcfg.decay`` when a refresh ran.
     Mutates ``state`` (refresh/skip counters, deployed chains).
     """
-    total_obs = float(np.asarray(carry.obs_counts).sum())
+    # NaN-safe gate (DESIGN.md §12): a poisoned accumulator must SKIP the
+    # refresh, not deploy corrupt tables.  Note `nan < threshold` is False
+    # — the min-observation gate alone would wave NaNs straight through.
+    obs_c = np.asarray(carry.obs_counts)
+    obs_r = np.asarray(carry.obs_rewards)
+    if not (np.isfinite(obs_c).all() and np.isfinite(obs_r).all()):
+        state.skipped_nonfinite += 1
+        return model, carry, False
+    total_obs = float(obs_c.sum())
     if total_obs < rcfg.min_observations:
         state.skipped_obs += 1
         return model, carry, False
@@ -156,8 +165,20 @@ def refresh_model(specs: Sequence[pat.PatternSpec], cfg: eng.EngineConfig,
             ut_stacked, ((0, 0), (0, B - ut_stacked.shape[1]), (0, 0)))
     elif ut_stacked.shape[1] > B:
         ut_stacked = ut_stacked[:, :B]
-    f_model = refit_latency_model(carry) if rcfg.refit_latency \
-        else model.f_model
+    # Same NaN discipline for the freshly built tables and the latency
+    # refit: a non-finite product (e.g. an Inf-polluted latency ring that
+    # degenerates the regression) keeps the deployed model.
+    if not np.isfinite(np.asarray(ut_stacked)).all():
+        state.skipped_nonfinite += 1
+        return model, carry, False
+    f_model = model.f_model
+    if rcfg.refit_latency:
+        cand = refit_latency_model(carry)
+        if bool(np.isfinite(np.asarray(cand.a)).all()
+                and np.isfinite(np.asarray(cand.b)).all()):
+            f_model = cand
+        else:
+            state.skipped_nonfinite += 1
     model = model._replace(ut_tables=ut_stacked, ut_bins=ut_bins,
                            f_model=f_model)
     if rcfg.decay < 1.0:

@@ -29,7 +29,107 @@ import numpy as np
 from repro.analysis import contracts as ctr
 from repro.cep import engine as eng
 from repro.cep import patterns as pat
-from repro.runtime import chunker, lanes as LN, refresh as RF, telemetry as TM
+from repro.runtime import chunker, guard as GD, ingest as IG, lanes as LN, \
+    refresh as RF, telemetry as TM
+
+# Degradation-ladder rungs (DESIGN.md §12), least to most drastic.  Rung 1
+# is the paper's own mechanism (pSPICE PM shedding, always armed) made
+# MORE aggressive: a standing between-chunk PM trim on top of the in-scan
+# Algorithm-1/2 path.  Rung 2 adds eSPICE-style input-level shedding at
+# admission; rung 3 stops ingesting entirely.
+RUNG_NORMAL, RUNG_PM_TRIM, RUNG_INPUT_SHED, RUNG_QUARANTINE = 0, 1, 2, 3
+RUNG_NAMES = ("normal", "pm_trim", "input_shed", "quarantine")
+
+
+@dataclasses.dataclass(frozen=True)
+class LadderConfig:
+    """Degradation-ladder state machine knobs (DESIGN.md §12)."""
+    escalate_streak: int = 3     # consecutive violating chunks to go up
+    deescalate_streak: int = 8   # consecutive clean chunks to come down
+    trim_frac: float = 0.25      # active-PM fraction trimmed per chunk @ r1+
+    input_shed_frac: float = 0.5  # forced admission drop probability @ r2+
+    max_rung: int = RUNG_QUARANTINE
+    latency_bound: float | None = None   # default: cfg.latency_bound
+
+    def __post_init__(self):
+        if self.escalate_streak < 1 or self.deescalate_streak < 1:
+            raise ValueError(
+                "ladder streaks must be >= 1 chunk: escalate_streak="
+                f"{self.escalate_streak}, deescalate_streak="
+                f"{self.deescalate_streak}")
+        for name in ("trim_frac", "input_shed_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"ladder.{name} is a drop ratio and must "
+                                 f"be in [0, 1]: {v}")
+        if not RUNG_NORMAL <= self.max_rung <= RUNG_QUARANTINE:
+            raise ValueError("ladder.max_rung must be one of "
+                             f"{list(range(len(RUNG_NAMES)))} "
+                             f"({'/'.join(RUNG_NAMES)}): {self.max_rung}")
+        if self.latency_bound is not None and not self.latency_bound > 0:
+            raise ValueError("ladder.latency_bound must be > 0 seconds "
+                             f"(or None to use the engine's): "
+                             f"{self.latency_bound}")
+
+    def rung_needs_ingest(self) -> bool:
+        """Rungs 2+ act at ADMISSION (forced input shedding) — they are
+        unreachable without an ingest front-end to carry them out."""
+        return self.max_rung >= RUNG_INPUT_SHED
+
+
+class DegradationLadder:
+    """Hysteresis state machine over latency-bound violation streaks.
+
+    ``observe`` is called once per completed chunk with its violation
+    verdict; ``escalate_streak`` consecutive violations move one rung up,
+    ``deescalate_streak`` consecutive clean chunks one rung down — streak
+    counters reset on every transition, so each move needs a FULL fresh
+    streak.  While quarantined no chunks run, so ``quarantine_tick``
+    (called per rejected push) provides the de-escalation clock instead —
+    quarantine can never be a terminal state.
+    """
+
+    def __init__(self, cfg: LadderConfig):
+        self.cfg = cfg
+        self.rung = RUNG_NORMAL
+        self._bad = 0
+        self._good = 0
+        self._q_ticks = 0
+        self.transitions: list[dict] = []
+
+    def _move(self, new_rung: int, chunk_index: int, why: str) -> dict:
+        tr = {"from": self.rung, "to": new_rung,
+              "from_name": RUNG_NAMES[self.rung],
+              "to_name": RUNG_NAMES[new_rung],
+              "why": why, "chunk": chunk_index}
+        self.rung = new_rung
+        self._bad = self._good = self._q_ticks = 0
+        self.transitions.append(tr)
+        return tr
+
+    def observe(self, violated: bool, chunk_index: int) -> dict | None:
+        if violated:
+            self._bad += 1
+            self._good = 0
+            if self._bad >= self.cfg.escalate_streak \
+                    and self.rung < self.cfg.max_rung:
+                return self._move(self.rung + 1, chunk_index, "escalate")
+        else:
+            self._good += 1
+            self._bad = 0
+            if self._good >= self.cfg.deescalate_streak \
+                    and self.rung > RUNG_NORMAL:
+                return self._move(self.rung - 1, chunk_index, "deescalate")
+        return None
+
+    def quarantine_tick(self, chunk_index: int) -> dict | None:
+        """De-escalation clock while no chunks flow (rung 3)."""
+        self._q_ticks += 1
+        if self._q_ticks >= self.cfg.deescalate_streak \
+                and self.rung > RUNG_NORMAL:
+            return self._move(self.rung - 1, chunk_index,
+                              "quarantine_timeout")
+        return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +149,30 @@ class RuntimeConfig:
     # (lax.scan ``unroll=``): >1 trades compile time for fewer loop-back
     # edges on very small chunks.  1 keeps the plain scan.
     scan_unroll: int = 1
+    # Resilience layer (DESIGN.md §12) — all three default OFF, and off
+    # means provably off: the runtime takes the exact pre-resilience code
+    # path and results stay bitwise-identical (tests/test_resilience.py).
+    ingest: IG.IngestConfig | None = None    # bounded admission front-end
+    ladder: LadderConfig | None = None       # degradation state machine
+    guard: GD.GuardConfig | None = None      # invariant checks + restore
+
+    def __post_init__(self):
+        if self.chunk_size < 1:
+            raise ValueError("runtime chunk_size must be >= 1 event: "
+                             f"{self.chunk_size}")
+        if self.scan_unroll < 1:
+            raise ValueError("runtime scan_unroll must be >= 1 (1 = plain "
+                             f"lax.scan): {self.scan_unroll}")
+        if self.group_chunks is not None and self.group_chunks < 1:
+            raise ValueError(
+                "runtime group_chunks must be >= 1 chunk per dispatch, or "
+                f"None for the auto policy: {self.group_chunks}")
+        if self.ladder is not None and self.ladder.rung_needs_ingest() \
+                and self.ingest is None:
+            raise ValueError(
+                "ladder.max_rung >= RUNG_INPUT_SHED needs an ingest front-"
+                "end to apply input shedding/quarantine — set rt.ingest "
+                "(IngestConfig) or cap ladder.max_rung at RUNG_PM_TRIM")
 
     def effective_group_chunks(self) -> int:
         if self.group_chunks is None:
@@ -133,6 +257,122 @@ class StreamRuntime:
         self._chunk_i = 0
         self.events_processed = 0
         self._snapshot: dict[str, float] | None = None
+        self._init_resilience()
+
+    # -- resilience layer (DESIGN.md §12) -----------------------------------
+    def _init_resilience(self) -> None:
+        """Ingest queue / degradation ladder / carry guard, each present
+        only when its config is — absent configs leave the pre-resilience
+        code path (and its results) untouched bit for bit."""
+        rt = self.rt
+        self.ingest = self._make_ingest() if rt.ingest is not None else None
+        self.ladder = DegradationLadder(rt.ladder) \
+            if rt.ladder is not None else None
+        self.guard = GD.CarryGuard(rt.guard, lanes=self._guard_lanes()) \
+            if rt.guard is not None else None
+        self._quarantined = False
+        self._event_cursor = 0       # global index after the last chunk
+        self.quarantine_dropped = 0  # events refused while quarantined
+        if self.guard is not None:
+            self.guard.save(self.carry, self.model, chunk_i=0)
+
+    def _make_ingest(self):
+        return IG.IngestQueue(self.rt.ingest)
+
+    def _guard_lanes(self) -> int | None:
+        return None
+
+    def _record_admission(self, rep) -> None:
+        for r in (rep if isinstance(rep, list) else [rep]):
+            if r.shed or r.rejected or r.quarantined:
+                self.telemetry.record_event(
+                    "admission", self._chunk_i, dataclasses.asdict(r))
+
+    @property
+    def backpressure(self) -> bool:
+        """True when the last offer hit the hard queue bound or left the
+        queue above the high watermark — slow the producer."""
+        if self.ingest is None:
+            return False
+        reps = self.ingest.reports
+        return bool(reps and reps[-1].backpressure)
+
+    def _apply_ladder(self, tr: dict | None) -> None:
+        """Record a ladder transition and apply its standing effects."""
+        if tr is None:
+            return
+        self.telemetry.record_event("ladder", tr["chunk"], tr)
+        rung = self.ladder.rung
+        if self.ingest is not None:
+            self.ingest.forced_drop = self.rt.ladder.input_shed_frac \
+                if rung >= RUNG_INPUT_SHED else 0.0
+        self._quarantined = rung >= RUNG_QUARANTINE
+
+    def _trim(self, frac: float) -> None:
+        i = eng.wrap_event_index(self._event_cursor)
+        self.carry = self._trim_call(i, jnp.float32(frac))
+        # Trim bumps pms_shed/shed_calls through the engine's own shed
+        # path; the stale counter snapshot folds them into the NEXT
+        # chunk's deltas, so aggregate telemetry stays complete.
+
+    def _trim_call(self, i, frac):
+        return GD.trim_store(self.cfg, self.model, self.carry, i, frac)
+
+    def _after_chunk(self, out: list[TM.ChunkStats]) -> None:
+        """Ladder observation + guard check at the chunk-group boundary
+        (the host's control cadence — same place refresh runs)."""
+        if self.ladder is not None:
+            bound = self.rt.ladder.latency_bound \
+                if self.rt.ladder.latency_bound is not None \
+                else self.cfg.latency_bound
+            for s in out:
+                self._apply_ladder(
+                    self.ladder.observe(s.l_e_p99 > bound, s.chunk_index))
+                s.rung = self.ladder.rung
+            if self.ladder.rung >= RUNG_PM_TRIM and not self._quarantined:
+                self._trim(self.rt.ladder.trim_frac)
+        if self.guard is not None:
+            self._guard_tick()
+
+    def _guard_tick(self) -> None:
+        gcfg = self.rt.guard
+        if self._chunk_i % gcfg.check_every_chunks != 0:
+            return
+        viols = self.guard.check(self.carry, self.model)
+        if viols:
+            for v in viols:
+                self.telemetry.record_event("guard_violation",
+                                            self._chunk_i, v.to_row())
+            if gcfg.restore_on_violation and self.guard.has_checkpoint:
+                self._guard_restore(viols)
+        elif self._chunk_i % gcfg.checkpoint_every_chunks == 0:
+            # Check-then-save: a poisoned state is never checkpointed.
+            self.guard.save(self.carry, self.model, self._chunk_i)
+
+    def _guard_restore(self, viols: list[GD.GuardViolation]) -> None:
+        self.carry, self.model = self.guard.restore(self.carry, self.model)
+        # Restore REWINDS the carry counters — the cached snapshot is
+        # stale; drop it so the next chunk re-baselines from the carry.
+        self._snapshot = None
+        self.telemetry.record_event("guard_restore", self._chunk_i, {
+            "from_chunk": self.guard.checkpoint_chunk,
+            "lanes": sorted({v.lane for v in viols
+                             if v.lane is not None}) or None})
+
+    def guard_now(self) -> list[GD.GuardViolation]:
+        """Run the invariant checks immediately (end-of-run sweep, tests,
+        chaos harness); restores on violation per the guard config."""
+        if self.guard is None:
+            raise ValueError("guard_now needs rt.guard (GuardConfig)")
+        viols = self.guard.check(self.carry, self.model)
+        if viols:
+            for v in viols:
+                self.telemetry.record_event("guard_violation",
+                                            self._chunk_i, v.to_row())
+            if self.rt.guard.restore_on_violation \
+                    and self.guard.has_checkpoint:
+                self._guard_restore(viols)
+        return viols
 
     # -- chunk execution (overridden by the lane runtime) -------------------
     def _run(self, chunk: eng.EventBatch, start: int):
@@ -161,17 +401,59 @@ class StreamRuntime:
         Consecutive full chunks run as macro-batched GROUPS — one device
         dispatch per up-to-``group_chunks`` chunks, never crossing a
         refresh boundary — with identical results and per-chunk stats to
-        chunk-at-a-time execution (tests/test_runtime.py)."""
-        start, region, n_chunks = self._buf.push_region(events)
-        stats = self._run_region(start, region, n_chunks)
+        chunk-at-a-time execution (tests/test_runtime.py).
+
+        With an ingest front-end (``rt.ingest``) events pass admission
+        control first — the admitted subset queues, and up to
+        ``pump_chunks`` chunks drain into execution per push.  While
+        quarantined (ladder rung 3) pushes are refused outright."""
+        stats = self._ingest_events(events)
         if flush:
             stats += self.flush()
         return stats
 
+    def _ingest_events(self, events: eng.EventBatch) -> list[TM.ChunkStats]:
+        if self._quarantined:
+            self._quarantine_refuse(events)
+            if self._quarantined:
+                return []
+            # the refusal ticked the ladder out of quarantine: fall
+            # through and ingest this push normally
+        if self.ingest is not None:
+            self._record_admission(self.ingest.offer(events))
+            return self._pump()
+        start, region, n_chunks = self._buf.push_region(events)
+        return self._run_region(start, region, n_chunks)
+
+    def _quarantine_refuse(self, events: eng.EventBatch) -> None:
+        n = chunker.num_events(events, self._buf.axis)
+        self.quarantine_dropped += n
+        if self.ladder is not None:
+            self._apply_ladder(self.ladder.quarantine_tick(self._chunk_i))
+
+    def _pump(self, drain: bool = False) -> list[TM.ChunkStats]:
+        limit = self.rt.ingest.pump_chunks
+        budget = None if limit <= 0 else limit * self.rt.chunk_size
+        ev = self.ingest.take(budget, drain=drain)
+        if ev is None:
+            return []
+        start, region, n_chunks = self._buf.push_region(ev)
+        return self._run_region(start, region, n_chunks)
+
     def flush(self) -> list[TM.ChunkStats]:
-        """Drain the buffered remainder as one final short chunk."""
-        return [self._run_piece(start, chunk)
-                for start, chunk in self._buf.drain()]
+        """Drain the ingest queue, then the buffered remainder as one
+        final short chunk."""
+        stats: list[TM.ChunkStats] = []
+        if self.ingest is not None:
+            while not self._quarantined:
+                ev = self.ingest.take(None, drain=True)
+                if ev is None:
+                    break
+                start, region, n_chunks = self._buf.push_region(ev)
+                stats += self._run_region(start, region, n_chunks)
+        stats += [self._run_piece(start, chunk)
+                  for start, chunk in self._buf.drain()]
+        return stats
 
     def _group_limit(self) -> int:
         return self.rt.effective_group_chunks()
@@ -237,6 +519,8 @@ class StreamRuntime:
         for s in out:
             self.telemetry.append(s)
             self.events_processed += s.n_events
+        self._event_cursor = start + g * cs
+        self._after_chunk(out)
         return out
 
     def _run_piece(self, start: int, chunk: eng.EventBatch) -> TM.ChunkStats:
@@ -263,6 +547,8 @@ class StreamRuntime:
         self._snapshot = TM.counters_from_vec(vec)
         self.telemetry.append(stats)
         self.events_processed += stats.n_events
+        self._event_cursor = start + n
+        self._after_chunk([stats])
         return stats
 
 
@@ -291,6 +577,37 @@ class MultiTenantRuntime(StreamRuntime):
         # chunk over the EVENT axis (axis 1 of lane-stacked leaves)
         self._buf = chunker.ChunkBuffer(self.rt.chunk_size, axis=1)
         self.refresh_state = [RF.RefreshState() for _ in range(num_lanes)]
+
+    def _make_ingest(self):
+        # One bounded queue PER TENANT LANE, re-aligned into lockstep
+        # lane-stacked batches on take (repro.runtime.ingest).
+        return IG.IngestFrontEnd(self.rt.ingest, self.num_lanes)
+
+    def _guard_lanes(self) -> int | None:
+        return self.num_lanes
+
+    def _trim_call(self, i, frac):
+        return GD.trim_store_lanes(self.cfg, self.model, self.carry, i,
+                                   frac)
+
+    def _guard_restore(self, viols: list[GD.GuardViolation]) -> None:
+        lanes_bad = sorted({v.lane for v in viols if v.lane is not None})
+        if not lanes_bad:
+            return super()._guard_restore(viols)
+        # Per-lane rollback: only the poisoned lanes reset; their
+        # neighbors keep live state bit for bit.
+        self.carry, self.model = self.guard.restore(
+            self.carry, self.model, lanes=lanes_bad)
+        self._snapshot = None
+        if self.ingest is not None \
+                and self.rt.guard.quarantine_offers > 0:
+            for lane in lanes_bad:
+                purged = self.ingest.quarantine_lane(
+                    lane, self.rt.guard.quarantine_offers)
+                self.quarantine_dropped += purged
+        self.telemetry.record_event("guard_restore", self._chunk_i, {
+            "from_chunk": self.guard.checkpoint_chunk,
+            "lanes": lanes_bad})
 
     def _run(self, chunk: eng.EventBatch, start: int):
         start_i = eng.wrap_event_index(start)

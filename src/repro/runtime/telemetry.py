@@ -45,13 +45,22 @@ def counter_snapshot(carry: Carry) -> dict[str, float]:
 @jax.jit
 def _chunk_stats_device(outs: StepOut, counters: tuple) -> jax.Array:
     l_e = outs.l_e.reshape(-1)
-    qs = jnp.quantile(l_e, jnp.array([0.5, 0.99], l_e.dtype))
-    pieces = [qs[0], qs[1], l_e.max(),          # l_e_p50 / p99 / max
-              outs.n_pm[..., -1].sum(),         # n_pm_end
-              outs.shed.sum(), outs.dropped.sum()]
+    if l_e.shape[0] == 0:
+        # Zero-length chunk (an empty push/drain): there are no events to
+        # reduce over — jnp.quantile/max on an empty axis would produce
+        # NaN / raise.  The latency/count slots are zero; the cumulative
+        # counter tail still reads the carry so the next chunk's baseline
+        # stays correct.  Static shape ⇒ this branch resolves at trace.
+        z = jnp.float32(0.0)
+        pieces = [z, z, z, z, z, z]
+    else:
+        qs = jnp.quantile(l_e, jnp.array([0.5, 0.99], l_e.dtype))
+        pieces = [qs[0], qs[1], l_e.max(),          # l_e_p50 / p99 / max
+                  outs.n_pm[..., -1].sum(),         # n_pm_end
+                  outs.shed.sum(), outs.dropped.sum()]
     pieces += [c.sum() for c in counters]       # _COUNTERS + complex_count
     assert len(pieces) == len(_VEC_FIELDS)
-    return jnp.stack([p.astype(jnp.float32) for p in pieces])
+    return jnp.stack([jnp.asarray(p).astype(jnp.float32) for p in pieces])
 
 
 def device_chunk_stats(outs: StepOut, carry: Carry) -> jax.Array:
@@ -91,6 +100,21 @@ class ChunkStats:
     completions: float
     refreshed: bool = False     # model refresh ran after this chunk
     refresh_wall_s: float = 0.0  # host time spent in/gating the refresh
+    rung: int = 0               # degradation-ladder rung after this chunk
+
+    def to_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class RuntimeEvent:
+    """A discrete runtime occurrence (ladder transition, guard violation,
+    guard restore, admission backpressure) — the mirror CI's chaos gate
+    checks runtime decisions against (DESIGN.md §12)."""
+    kind: str            # "ladder" | "guard_violation" | "guard_restore" |
+                         # "admission"
+    chunk_index: int
+    detail: dict = dataclasses.field(default_factory=dict)
 
     def to_row(self) -> dict:
         return dataclasses.asdict(self)
@@ -127,12 +151,25 @@ class TelemetryLog:
 
     def __init__(self):
         self.chunks: list[ChunkStats] = []
+        self.events: list[RuntimeEvent] = []
 
     def append(self, stats: ChunkStats) -> None:
         self.chunks.append(stats)
 
+    def record_event(self, kind: str, chunk_index: int,
+                     detail: dict | None = None) -> RuntimeEvent:
+        ev = RuntimeEvent(kind, chunk_index, detail or {})
+        self.events.append(ev)
+        return ev
+
+    def events_of(self, kind: str) -> list[RuntimeEvent]:
+        return [e for e in self.events if e.kind == kind]
+
     def rows(self) -> list[dict]:
         return [c.to_row() for c in self.chunks]
+
+    def event_rows(self) -> list[dict]:
+        return [e.to_row() for e in self.events]
 
     def aggregate(self) -> dict:
         if not self.chunks:
@@ -156,4 +193,8 @@ class TelemetryLog:
             "ebl_dropped": sum(c.ebl_dropped for c in self.chunks),
             "completions": sum(c.completions for c in self.chunks),
             "refreshes": sum(1 for c in self.chunks if c.refreshed),
+            "max_rung": max(c.rung for c in self.chunks),
+            "ladder_transitions": len(self.events_of("ladder")),
+            "guard_violations": len(self.events_of("guard_violation")),
+            "guard_restores": len(self.events_of("guard_restore")),
         }

@@ -1,0 +1,696 @@
+"""Resilience layer tests (DESIGN.md §12): admission-controlled ingest,
+degradation ladder, carry guard/recovery, fault injection — plus the
+config-validation and divide-by-zero regression satellites.
+
+The load-bearing guarantee, tested first: with every resilience config
+absent OR present-but-inert, runtime results are bitwise-identical to the
+pre-resilience path — the layer provably costs nothing when idle.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.runtime as RT
+from repro.cep import engine as eng
+from repro.cep import patterns as pat
+from repro.cep import runner
+from repro.data import streams
+from repro.eval import quality as Q
+from repro.runtime import telemetry as TM
+
+# Same constants as tests/test_runtime.py so the in-process jit cache is
+# shared when both files run in one session.
+COST = dict(c_base=3e-4, c_match=6e-5, c_shed_base=1.5e-4, c_shed_pm=1.5e-6,
+            c_ebl=6e-5)
+N_EVENTS = 2000
+
+
+def _assert_tree_equal(a, b, what=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    specs = [pat.make_q1(window_size=400, num_symbols=4)]
+    cp = pat.compile_patterns(specs)
+    cfg = runner.default_config(cp, max_pms=48, latency_bound=0.005,
+                                gather_stats=True, shedder=eng.SHED_PSPICE,
+                                **COST)
+    model = eng.make_model(cp, cfg)
+    rate = 3.0 / (cfg.c_base + cfg.c_match * 0.3 * cfg.max_pms)
+
+    def make_events(seed, rate_mult=1.0, n=N_EVENTS):
+        raw = streams.gen_stock(n, num_symbols=50, pattern_symbols=4,
+                                p_class=0.05, seed=100 + seed)
+        return streams.classify(specs, raw, rate=rate * rate_mult, seed=seed)
+
+    return specs, cfg, model, make_events
+
+
+def _ev(n, arrival_rate=1000.0, seed=0, t0=0.0):
+    """A minimal synthetic EventBatch for front-end-only tests."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / arrival_rate, n).astype(np.float32)
+    return eng.EventBatch(
+        ev_class=jnp.ones((n, 1), jnp.int32),
+        ev_bind=jnp.zeros((n, 1), jnp.int32),
+        ev_open=jnp.ones((n, 1), bool),
+        ev_id=jnp.arange(n, dtype=jnp.int32),
+        ev_rand=jnp.asarray(rng.random(n), jnp.float32),
+        ebl_raw=jnp.zeros((n,), jnp.float32),
+        arrival=jnp.asarray(t0 + np.cumsum(gaps), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: config validation with actionable messages
+# ---------------------------------------------------------------------------
+
+class TestConfigValidation:
+    def _cfg(self, **kw):
+        base = dict(num_patterns=1, max_states=4, max_classes=4, max_pms=32)
+        base.update(kw)
+        return eng.EngineConfig(**base)
+
+    @pytest.mark.parametrize("field,value,needle", [
+        ("latency_bound", 0.0, "latency_bound"),
+        ("latency_bound", -1.0, "latency_bound"),
+        ("max_pms", 0, "max_pms"),
+        ("num_patterns", 0, "num_patterns"),
+        ("ring_size", 0, "ring_size"),
+        ("max_any_ids", -1, "max_any_ids"),
+        ("safety_buffer", -0.1, "safety_buffer"),
+        ("c_base", -1e-6, "c_base"),
+        ("ebl_floor", 1.5, "ebl_floor"),
+        ("ebl_decay", -0.1, "ebl_decay"),
+        ("ebl_backlog_gain", -1.0, "ebl_backlog_gain"),
+        ("shedder", "bogus", "shedder"),
+        ("shed_plan", "quick", "shed_plan"),
+        ("spawn_alloc", "marx", "spawn_alloc"),
+        ("kinds", "all", "kinds"),
+        ("spawn_modes", "never", "spawn_modes"),
+    ])
+    def test_engine_config_rejects_bad_field(self, field, value, needle):
+        with pytest.raises(ValueError, match=needle):
+            self._cfg(**{field: value})
+
+    def test_engine_config_accepts_valid(self):
+        self._cfg(latency_bound=0.005, ebl_floor=0.0, ebl_decay=1.0)
+
+    @pytest.mark.parametrize("kw,needle", [
+        (dict(chunk_size=0), "chunk_size"),
+        (dict(scan_unroll=0), "scan_unroll"),
+        (dict(group_chunks=0), "group_chunks"),
+    ])
+    def test_runtime_config_rejects_bad_field(self, kw, needle):
+        with pytest.raises(ValueError, match=needle):
+            RT.RuntimeConfig(**kw)
+
+    def test_ladder_input_shed_requires_ingest(self):
+        with pytest.raises(ValueError, match="ingest"):
+            RT.RuntimeConfig(ladder=RT.LadderConfig())
+        # capped below the admission rungs no front-end is needed
+        RT.RuntimeConfig(ladder=RT.LadderConfig(max_rung=RT.RUNG_PM_TRIM))
+
+    @pytest.mark.parametrize("kw,needle", [
+        (dict(max_queue_events=0), "max_queue_events"),
+        (dict(low_watermark=600, high_watermark=500), "watermark"),
+        (dict(high_watermark=1 << 20), "watermark"),
+        (dict(shed_max=1.5), "shed_max"),
+        (dict(admit_rate=10.0, admit_burst=0.0), "admit_burst"),
+    ])
+    def test_ingest_config_rejects_bad_field(self, kw, needle):
+        with pytest.raises(ValueError, match=needle):
+            RT.IngestConfig(**kw)
+
+    @pytest.mark.parametrize("kw,needle", [
+        (dict(escalate_streak=0), "streak"),
+        (dict(trim_frac=1.2), "trim_frac"),
+        (dict(input_shed_frac=-0.1), "input_shed_frac"),
+        (dict(max_rung=7), "max_rung"),
+        (dict(latency_bound=0.0), "latency_bound"),
+    ])
+    def test_ladder_config_rejects_bad_field(self, kw, needle):
+        with pytest.raises(ValueError, match=needle):
+            RT.LadderConfig(**kw)
+
+    @pytest.mark.parametrize("kw,needle", [
+        (dict(check_every_chunks=0), "check_every_chunks"),
+        (dict(checkpoint_every_chunks=0), "checkpoint_every_chunks"),
+        (dict(quarantine_offers=-1), "quarantine_offers"),
+    ])
+    def test_guard_config_rejects_bad_field(self, kw, needle):
+        with pytest.raises(ValueError, match=needle):
+            RT.GuardConfig(**kw)
+
+    def test_fault_config_rejects_bad_field(self):
+        with pytest.raises(ValueError, match="fault kinds"):
+            RT.FaultConfig(kinds=("burst", "meteor"))
+        with pytest.raises(ValueError, match="p_fault"):
+            RT.FaultConfig(p_fault=2.0)
+
+
+# ---------------------------------------------------------------------------
+# Ingest queue: admission control, watermarks, backpressure, determinism
+# ---------------------------------------------------------------------------
+
+class TestIngestQueue:
+    CFG = RT.IngestConfig(max_queue_events=1000, high_watermark=500,
+                          low_watermark=100, shed_max=0.9, seed=7)
+
+    def test_passthrough_below_watermark(self):
+        q = RT.IngestQueue(self.CFG)
+        ev = _ev(200)
+        rep = q.offer(ev)
+        assert (rep.offered, rep.admitted, rep.shed, rep.rejected) \
+            == (200, 200, 0, 0)
+        assert not rep.backpressure
+        out = q.take()
+        _assert_tree_equal(ev, out, "passthrough must preserve events")
+        assert q.depth == 0
+
+    def test_watermark_shedding_with_hysteresis(self):
+        q = RT.IngestQueue(self.CFG)
+        r1 = q.offer(_ev(600))
+        assert r1.drop_p == 0.0 and r1.backpressure   # above high AFTER
+        r2 = q.offer(_ev(200, seed=1))
+        assert r2.drop_p > 0.0 and r2.shed > 0        # now engaged
+        q.take()                                       # drain below low
+        r3 = q.offer(_ev(50, seed=2))
+        assert r3.drop_p == 0.0 and r3.shed == 0      # disengaged
+
+    def test_hard_bound_rejects_and_signals_backpressure(self):
+        q = RT.IngestQueue(dataclasses.replace(
+            self.CFG, high_watermark=1000, low_watermark=1000,
+            shed_max=0.0))
+        rep = q.offer(_ev(1500))
+        assert rep.rejected == 500 and rep.admitted == 1000
+        assert rep.backpressure and q.depth == 1000
+
+    def test_token_bucket_clocked_by_arrival_time(self):
+        # 2000 ev/s offered against a 500 ev/s bucket with a small burst:
+        # roughly 3/4 of the steady-state stream must shed.
+        cfg = RT.IngestConfig(max_queue_events=1 << 16,
+                              high_watermark=1 << 16,
+                              low_watermark=0, admit_rate=500.0,
+                              admit_burst=64.0, seed=3)
+        q = RT.IngestQueue(cfg)
+        for i in range(10):
+            q.offer(_ev(200, arrival_rate=2000.0, seed=i, t0=i * 0.1))
+        assert q.total_shed > 0.5 * q.total_offered
+        assert q.total_admitted < 0.5 * q.total_offered
+
+    def test_seeded_determinism(self):
+        reps = []
+        for _ in range(2):
+            q = RT.IngestQueue(self.CFG)
+            q.forced_drop = 0.4
+            ids = []
+            for i in range(4):
+                q.offer(_ev(300, seed=i))
+                out = q.take()
+                ids.append(np.asarray(out.ev_id) if out is not None
+                           else np.zeros(0))
+            reps.append(np.concatenate(ids))
+        np.testing.assert_array_equal(reps[0], reps[1])
+
+    def test_take_slices_across_batches_in_order(self):
+        q = RT.IngestQueue(self.CFG)
+        q.offer(_ev(60))
+        q.offer(_ev(60, seed=1))
+        out = q.take(100)
+        assert RT.num_events(out) == 100 and q.depth == 20
+        np.testing.assert_array_equal(np.asarray(out.ev_id)[:60],
+                                      np.arange(60))
+        rest = q.take()
+        assert RT.num_events(rest) == 20
+        np.testing.assert_array_equal(np.asarray(rest.ev_id),
+                                      np.arange(40, 60))
+
+    def test_neutral_events_are_inert(self, setup):
+        """neutral_like events must advance the clock but never spawn,
+        match, or E-BL-drop — the quarantine substitute is safe."""
+        _, cfg, model, make_events = setup
+        ev = RT.neutral_like(make_events(0))
+        carry, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(np.asarray(carry.complex_count).sum()) == 0
+        assert float(np.asarray(carry.pms_created).sum()) == 0
+        assert float(np.asarray(carry.ebl_dropped)) == 0
+        assert float(carry.sim_time) > 0
+
+
+class TestIngestFrontEnd:
+    CFG = RT.IngestConfig(max_queue_events=1000, high_watermark=900,
+                          low_watermark=100, seed=11)
+
+    def test_lockstep_take_aligns_to_min_depth(self):
+        fe = RT.IngestFrontEnd(self.CFG, num_lanes=2)
+        fe.queues[0].forced_drop = 0.5   # lane 0 sheds, lane 1 doesn't
+        fe.offer(RT.stack([_ev(100), _ev(100, seed=1)]))
+        d0, d1 = fe.queues[0].depth, fe.queues[1].depth
+        assert d0 < d1 == 100
+        out = fe.take()
+        assert out.ev_id.shape == (2, d0)      # aligned to the min
+        assert fe.queues[1].depth == d1 - d0   # remainder stays queued
+
+    def test_drain_pads_short_lanes_with_neutral(self):
+        fe = RT.IngestFrontEnd(self.CFG, num_lanes=2)
+        fe.queues[0].forced_drop = 0.5
+        fe.offer(RT.stack([_ev(100), _ev(100, seed=1)]))
+        out = fe.take(drain=True)
+        assert out.ev_id.shape == (2, 100)     # padded to the max
+        lane0 = np.asarray(out.ev_class[0, :, 0])
+        assert (lane0[-1] == 0) and fe.queues[0].depth == 0
+        # lane 1 is the full untouched stream
+        np.testing.assert_array_equal(np.asarray(out.ev_id[1]),
+                                      np.arange(100))
+
+    def test_quarantined_lane_purges_and_substitutes(self):
+        fe = RT.IngestFrontEnd(self.CFG, num_lanes=2)
+        fe.offer(RT.stack([_ev(50), _ev(50, seed=1)]))
+        purged = fe.quarantine_lane(0, offers=2)
+        assert purged == 50 and fe.quarantined_lanes() == [0]
+        out = fe.take()
+        assert out is not None and out.ev_id.shape == (2, 50)
+        assert (np.asarray(out.ev_class[0]) == 0).all()   # neutral sub
+        rep0, _ = fe.offer(RT.stack([_ev(30, seed=2), _ev(30, seed=3)]))
+        assert rep0.quarantined and rep0.admitted == 0
+        fe.offer(RT.stack([_ev(30, seed=4), _ev(30, seed=5)]))
+        assert fe.quarantined_lanes() == []    # released after 2 offers
+
+
+# ---------------------------------------------------------------------------
+# Fault injector: determinism + contract of each stream fault
+# ---------------------------------------------------------------------------
+
+class TestFaultInjector:
+    def test_seeded_replay_is_bit_identical(self):
+        outs = []
+        for _ in range(2):
+            inj = RT.FaultInjector(RT.FaultConfig(seed=9, p_fault=0.7))
+            evs = [inj.corrupt_events(_ev(400, seed=i)) for i in range(4)]
+            outs.append((inj.log, evs))
+        assert outs[0][0] == outs[1][0] and len(outs[0][0]) > 0
+        for a, b in zip(outs[0][1], outs[1][1]):
+            _assert_tree_equal(a, b, "replayed faulted stream")
+
+    @pytest.mark.parametrize("kind", RT.STREAM_FAULTS)
+    def test_stream_faults_keep_arrivals_monotone(self, kind):
+        inj = RT.FaultInjector(RT.FaultConfig(seed=2, p_fault=1.0,
+                                              kinds=(kind,)))
+        ev = inj.corrupt_events(_ev(500))
+        arr = np.asarray(ev.arrival)
+        assert (np.diff(arr) >= -1e-6).all(), f"{kind} broke monotonicity"
+
+    def test_duplicate_extends_reorder_permutes(self):
+        cfg = RT.FaultConfig(seed=4, p_fault=1.0, kinds=("duplicate",),
+                             dup_len=32)
+        ev = RT.FaultInjector(cfg).corrupt_events(_ev(300))
+        assert RT.num_events(ev) == 332
+        ids = np.asarray(ev.ev_id)
+        uniq, counts = np.unique(ids, return_counts=True)
+        assert (counts == 2).sum() == 32     # exactly the dup window twice
+
+        cfg = RT.FaultConfig(seed=4, p_fault=1.0, kinds=("reorder",))
+        ev2 = RT.FaultInjector(cfg).corrupt_events(_ev(300))
+        ids2 = np.asarray(ev2.ev_id)
+        np.testing.assert_array_equal(np.sort(ids2), np.arange(300))
+        assert (ids2 != np.arange(300)).any()
+
+    def test_burst_compresses_gaps(self):
+        cfg = RT.FaultConfig(seed=6, p_fault=1.0, kinds=("burst",),
+                             burst_factor=10.0, burst_len=128)
+        base = _ev(500)
+        ev = RT.FaultInjector(cfg).corrupt_events(base)
+        # total span shrinks by the compressed window's removed time
+        assert float(ev.arrival[-1]) < float(base.arrival[-1])
+
+    def test_state_faults_poison_what_guards_must_catch(self, setup):
+        _, cfg, model, _ = setup
+        inj = RT.FaultInjector(RT.FaultConfig(
+            seed=1, p_fault=1.0, kinds=("lane_poison", "nan_refresh",
+                                        "table_corrupt")))
+        carry = inj.corrupt_carry(eng.init_carry(cfg))
+        assert not np.isfinite(np.asarray(carry.sim_time))
+        assert not np.isfinite(np.asarray(carry.obs_counts)).all()
+        bad = inj.corrupt_model(model)
+        assert not np.isfinite(np.asarray(bad.ut_tables)).all()
+        cv = np.asarray(RT.carry_check_vec(carry))
+        mv = np.asarray(RT.model_check_vec(bad))
+        assert not cv.all() and not mv.all()
+
+
+# ---------------------------------------------------------------------------
+# Guard: checks, checkpoint/restore, trim
+# ---------------------------------------------------------------------------
+
+class TestGuard:
+    def test_healthy_state_passes_all_checks(self, setup):
+        _, cfg, model, make_events = setup
+        carry, _ = eng.run_engine(cfg, model, make_events(0),
+                                  eng.init_carry(cfg))
+        assert np.asarray(RT.carry_check_vec(carry)).all()
+        assert np.asarray(RT.model_check_vec(model)).all()
+
+    @pytest.mark.parametrize("poison,check", [
+        (lambda c: c._replace(sim_time=jnp.float32(jnp.nan)),
+         "finite_time"),
+        (lambda c: c._replace(
+            lat_samples_l=c.lat_samples_l.at[0].set(jnp.inf)),
+         "finite_latency_ring"),
+        (lambda c: c._replace(ring_ptr=c.ring_ptr.at[0].set(-3)),
+         "store_consistent"),
+        (lambda c: c._replace(pms_shed=jnp.float32(-1.0)),
+         "counters_sane"),
+        (lambda c: c._replace(
+            obs_counts=c.obs_counts.at[0, 0, 0].set(jnp.nan)),
+         "finite_obs"),
+    ])
+    def test_each_carry_check_catches_its_poison(self, setup, poison,
+                                                 check):
+        _, cfg, _, _ = setup
+        carry = poison(eng.init_carry(cfg))
+        vec = np.asarray(RT.carry_check_vec(carry))
+        assert not vec[RT.CARRY_CHECKS.index(check)]
+
+    def test_checkpoint_restore_roundtrips_bitwise(self, setup):
+        _, cfg, model, make_events = setup
+        carry, _ = eng.run_engine(cfg, model, make_events(0),
+                                  eng.init_carry(cfg))
+        g = RT.CarryGuard(RT.GuardConfig())
+        g.save(carry, model, chunk_i=5)
+        poisoned = carry._replace(sim_time=jnp.float32(jnp.nan))
+        rc, rm = g.restore(poisoned, model)
+        _assert_tree_equal(carry, rc, "restored carry")
+        _assert_tree_equal(model, rm, "restored model")
+        assert g.checkpoint_chunk == 5 and g.restores == 1
+
+    def test_checkpoint_survives_donation(self, setup):
+        """The checkpoint must hold TRUE copies: running more chunks
+        (which donate/delete the live carry buffers) must not corrupt
+        what restore returns."""
+        _, cfg, model, make_events = setup
+        srt = RT.StreamRuntime(cfg, model,
+                               rt=RT.RuntimeConfig(chunk_size=256))
+        srt.push(make_events(0))
+        g = RT.CarryGuard(RT.GuardConfig())
+        g.save(srt.carry, srt.model, chunk_i=srt._chunk_i)
+        want = jax.tree.map(lambda x: np.array(x), srt.carry)
+        srt.push(make_events(1), flush=True)   # donates the old buffers
+        rc, _ = g.restore(srt.carry, srt.model)
+        _assert_tree_equal(want, rc, "checkpoint after donation")
+
+    def test_trim_store_drops_requested_fraction(self, setup):
+        _, cfg, model, _ = setup
+        carry = eng.init_carry(cfg)
+        n0 = 10   # plant n0 live PMs in open windows at known slots
+        pms = carry.pms._replace(
+            active=carry.pms.active.at[0, :n0].set(True),
+            state=carry.pms.state.at[0, :n0].set(1),
+            open_idx=carry.pms.open_idx.at[0, :n0].set(
+                jnp.arange(200, 200 + n0 * 20, 20, dtype=jnp.int32)))
+        carry = carry._replace(pms=pms)
+        trimmed = RT.trim_store(cfg, model, carry, jnp.int32(500),
+                                jnp.float32(0.5))
+        n1 = int(np.asarray(trimmed.pms.active).sum())
+        assert n1 == n0 - int(np.ceil(0.5 * n0))   # exactly rho dropped
+        assert float(trimmed.pms_shed) == n0 - n1
+        assert float(trimmed.shed_calls) == 1.0
+        # the trim pays the engine's simulated shed cost
+        assert float(trimmed.sim_time) > float(carry.sim_time)
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder
+# ---------------------------------------------------------------------------
+
+class TestLadder:
+    CFG = RT.LadderConfig(escalate_streak=2, deescalate_streak=3,
+                          max_rung=RT.RUNG_PM_TRIM)
+
+    def test_escalates_after_streak_and_resets(self):
+        lad = RT.DegradationLadder(RT.LadderConfig(
+            escalate_streak=3, deescalate_streak=2))
+        assert [lad.observe(True, i) for i in range(2)] == [None, None]
+        assert lad.observe(False, 2) is None          # streak broken
+        assert [lad.observe(True, i) for i in (3, 4)] == [None, None]
+        tr = lad.observe(True, 5)
+        assert tr["to"] == RT.RUNG_PM_TRIM and lad.rung == RT.RUNG_PM_TRIM
+
+    def test_deescalates_symmetrically_and_clamps(self):
+        lad = RT.DegradationLadder(RT.LadderConfig(
+            escalate_streak=1, deescalate_streak=2,
+            max_rung=RT.RUNG_INPUT_SHED))
+        for i in range(5):
+            lad.observe(True, i)
+        assert lad.rung == RT.RUNG_INPUT_SHED          # clamped at max
+        assert lad.observe(False, 5) is None
+        assert lad.observe(False, 6)["to"] == RT.RUNG_PM_TRIM
+        assert lad.observe(False, 7) is None           # fresh streak needed
+        assert lad.observe(False, 8)["to"] == RT.RUNG_NORMAL
+        assert lad.observe(False, 9) is None           # floor
+
+    def test_quarantine_tick_deescalates_without_chunks(self):
+        lad = RT.DegradationLadder(RT.LadderConfig(escalate_streak=1,
+                                                   deescalate_streak=2))
+        for i in range(4):
+            lad.observe(True, i)
+        assert lad.rung == RT.RUNG_QUARANTINE
+        assert lad.quarantine_tick(4) is None
+        tr = lad.quarantine_tick(5)
+        assert tr["why"] == "quarantine_timeout" \
+            and lad.rung == RT.RUNG_INPUT_SHED
+
+    def test_runtime_escalation_mirrored_in_telemetry(self, setup):
+        """A bound the stream can never meet escalates the ladder; every
+        transition must appear in telemetry, trims must shed PMs, and the
+        per-chunk rung must be recorded."""
+        specs, cfg, model, make_events = setup
+        rt = RT.RuntimeConfig(
+            chunk_size=256,
+            ingest=RT.IngestConfig(max_queue_events=1 << 16,
+                                   high_watermark=1 << 16, low_watermark=0,
+                                   seed=1),
+            ladder=RT.LadderConfig(escalate_streak=1, deescalate_streak=2,
+                                   latency_bound=1e-7))
+        srt = RT.StreamRuntime(cfg, model, rt, specs=specs)
+        srt.push(make_events(0), flush=True)
+        assert srt.ladder.rung == RT.RUNG_QUARANTINE
+        evs = srt.telemetry.events_of("ladder")
+        assert len(evs) == len(srt.ladder.transitions) == 3
+        assert [e.detail["to"] for e in evs] == [1, 2, 3]
+        assert srt.telemetry.chunks[-1].rung == RT.RUNG_QUARANTINE
+        assert max(c.rung for c in srt.telemetry.chunks) == 3
+        # rung >= 2 forces admission-level shedding
+        assert srt.ingest.forced_drop \
+            == rt.ladder.input_shed_frac
+        # quarantine refuses subsequent pushes outright
+        n_before = srt.events_processed
+        assert srt.push(make_events(1)) == []
+        assert srt.quarantine_dropped == N_EVENTS
+        assert srt.events_processed == n_before
+
+    def test_quarantine_recovers_via_push_ticks(self, setup):
+        specs, cfg, model, make_events = setup
+        rt = RT.RuntimeConfig(
+            chunk_size=256,
+            ingest=RT.IngestConfig(max_queue_events=1 << 16,
+                                   high_watermark=1 << 16, low_watermark=0,
+                                   seed=1),
+            ladder=RT.LadderConfig(escalate_streak=1, deescalate_streak=2,
+                                   latency_bound=1e-7))
+        srt = RT.StreamRuntime(cfg, model, rt, specs=specs)
+        srt.push(make_events(0), flush=True)
+        assert srt._quarantined
+        srt.push(make_events(1, n=256))        # tick 1: refused
+        assert srt._quarantined
+        # tick 2 (an empty heartbeat push) de-escalates to rung 2 — the
+        # refusal clock guarantees quarantine is never terminal.
+        srt.push(RT.slice_events(make_events(1, n=256), 0, 0))
+        assert not srt._quarantined
+        assert srt.ladder.rung == RT.RUNG_INPUT_SHED
+        drops = [e for e in srt.telemetry.events_of("ladder")
+                 if e.detail["why"] == "quarantine_timeout"]
+        assert len(drops) == 1
+
+    def test_trim_rung_sheds_between_chunks(self, setup):
+        """At rung >= 1 with a NONE in-scan shedder, any PM loss can only
+        come from the ladder's between-chunk trim."""
+        specs, cfg, model, make_events = setup
+        cfg_ns = dataclasses.replace(cfg, shedder=eng.SHED_NONE,
+                                     latency_bound=1.0)
+        rt = RT.RuntimeConfig(
+            chunk_size=256,
+            ladder=RT.LadderConfig(escalate_streak=1, deescalate_streak=99,
+                                   max_rung=RT.RUNG_PM_TRIM,
+                                   latency_bound=1e-7, trim_frac=0.5))
+        srt = RT.StreamRuntime(cfg_ns, model, rt)
+        srt.push(make_events(0), flush=True)
+        assert srt.ladder.rung == RT.RUNG_PM_TRIM
+        assert float(np.asarray(srt.carry.pms_shed)) > 0
+        agg = srt.telemetry.aggregate()
+        assert agg["pms_shed"] > 0 and agg["max_rung"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Runtime integration: poison → detect → restore → finish clean
+# ---------------------------------------------------------------------------
+
+class TestGuardedRuntime:
+    def test_poisoned_carry_restores_and_finishes_finite(self, setup):
+        specs, cfg, model, make_events = setup
+        rt = RT.RuntimeConfig(chunk_size=256, guard=RT.GuardConfig(
+            check_every_chunks=1, checkpoint_every_chunks=2))
+        srt = RT.StreamRuntime(cfg, model, rt)
+        ev = make_events(0)
+        srt.push(RT.slice_events(ev, 0, 1024))
+        srt.carry = srt.carry._replace(sim_time=jnp.float32(jnp.nan))
+        srt.push(RT.slice_events(ev, 1024, N_EVENTS), flush=True)
+        assert srt.guard_now() == []
+        assert len(srt.telemetry.events_of("guard_violation")) >= 1
+        assert len(srt.telemetry.events_of("guard_restore")) >= 1
+        for leaf in jax.tree.leaves(srt.carry):
+            a = np.asarray(leaf)
+            if np.issubdtype(a.dtype, np.floating):
+                assert np.isfinite(a).all()
+
+    def test_nan_refresh_gate_keeps_deployed_model(self, setup):
+        specs, cfg, model, make_events = setup
+        rt = RT.RuntimeConfig(
+            chunk_size=256,
+            refresh=RT.RefreshConfig(every_chunks=2, min_observations=1.0))
+        srt = RT.StreamRuntime(cfg, model, rt, specs=specs)
+        srt.push(make_events(0, n=512))
+        srt.carry = srt.carry._replace(
+            obs_counts=srt.carry.obs_counts.at[0, 0, 0].set(jnp.nan))
+        tables_before = np.array(srt.model.ut_tables)
+        srt.push(make_events(1, n=512))
+        assert srt.refresh_state.skipped_nonfinite >= 1
+        np.testing.assert_array_equal(tables_before,
+                                      np.asarray(srt.model.ut_tables))
+        assert np.isfinite(np.asarray(srt.model.ut_tables)).all()
+
+    def test_lane_restore_leaves_neighbors_bitwise_untouched(self, setup):
+        specs, cfg, model, make_events = setup
+        L = 2
+        evL = RT.stack([make_events(i) for i in range(L)])
+        mL = RT.broadcast_model(model, L)
+        rt = RT.RuntimeConfig(chunk_size=256, guard=RT.GuardConfig(
+            check_every_chunks=1, checkpoint_every_chunks=2))
+        mt = RT.MultiTenantRuntime(cfg, mL, num_lanes=L, rt=rt)
+        clean = RT.MultiTenantRuntime(cfg, RT.broadcast_model(model, L),
+                                      num_lanes=L,
+                                      rt=RT.RuntimeConfig(chunk_size=256))
+        mt.push(RT.slice_events(evL, 0, 1024, axis=1))
+        clean.push(RT.slice_events(evL, 0, 1024, axis=1))
+        mt.carry = mt.carry._replace(
+            sim_time=mt.carry.sim_time.at[1].set(jnp.nan))
+        mt.push(RT.slice_events(evL, 1024, N_EVENTS, axis=1), flush=True)
+        clean.push(RT.slice_events(evL, 1024, N_EVENTS, axis=1),
+                   flush=True)
+        viols = mt.telemetry.events_of("guard_violation")
+        assert viols and viols[0].detail["lane"] == 1
+        assert mt.telemetry.events_of("guard_restore")[0].detail["lanes"] \
+            == [1]
+        lane0 = jax.tree.map(lambda x: np.asarray(x)[0], mt.carry)
+        lane0_clean = jax.tree.map(lambda x: np.asarray(x)[0], clean.carry)
+        _assert_tree_equal(lane0_clean, lane0, "lane 0 must be untouched")
+        for leaf in jax.tree.leaves(mt.carry):
+            a = np.asarray(leaf)
+            if np.issubdtype(a.dtype, np.floating):
+                assert np.isfinite(a).all()
+
+
+# ---------------------------------------------------------------------------
+# The bitwise-off guarantee
+# ---------------------------------------------------------------------------
+
+class TestResilienceCostsNothing:
+    def test_disabled_configs_bitwise_identical(self, setup):
+        _, cfg, model, make_events = setup
+        ev = make_events(0)
+        c_mono, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        srt = RT.StreamRuntime(cfg, model,
+                               rt=RT.RuntimeConfig(chunk_size=256))
+        assert srt.ingest is None and srt.ladder is None \
+            and srt.guard is None
+        srt.push(ev, flush=True)
+        _assert_tree_equal(c_mono, srt.carry, "resilience-off carry")
+
+    def test_inert_resilience_bitwise_identical(self, setup):
+        """Resilience ENABLED but never triggered (lavish watermarks, an
+        unmeetable-ly generous bound, guards that always pass) must also
+        be bitwise-identical — the layer only ever acts on its rungs."""
+        specs, cfg, model, make_events = setup
+        ev = make_events(0)
+        c_mono, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        rt = RT.RuntimeConfig(
+            chunk_size=256,
+            ingest=RT.IngestConfig(max_queue_events=1 << 20,
+                                   high_watermark=1 << 20, low_watermark=0,
+                                   seed=0),
+            ladder=RT.LadderConfig(latency_bound=1e9),
+            guard=RT.GuardConfig(check_every_chunks=1,
+                                 checkpoint_every_chunks=4))
+        srt = RT.StreamRuntime(cfg, model, rt, specs=specs)
+        for s in range(0, N_EVENTS, 700):
+            srt.push(RT.slice_events(ev, s, min(s + 700, N_EVENTS)))
+        srt.flush()
+        _assert_tree_equal(c_mono, srt.carry, "inert resilience carry")
+        assert srt.telemetry.events == []
+        assert srt.guard.violations == 0 and srt.guard.checkpoints > 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: divide-by-zero / empty-input guards
+# ---------------------------------------------------------------------------
+
+class TestEmptyInputGuards:
+    def test_device_chunk_stats_empty_chunk(self, setup):
+        _, cfg, _, _ = setup
+        carry = eng.init_carry(cfg)
+        P = cfg.num_patterns
+        outs = eng.StepOut(
+            l_e=jnp.zeros((0,), jnp.float32),
+            n_pm=jnp.zeros((0,), jnp.int32),
+            shed=jnp.zeros((0,), bool),
+            dropped=jnp.zeros((0,), bool),
+            match_open=jnp.zeros((P, 0), jnp.int32),
+            match_bind=jnp.zeros((P, 0), jnp.int32))
+        vec = np.asarray(TM.device_chunk_stats(outs, carry))
+        assert np.isfinite(vec).all()
+        assert (vec[:6] == 0).all()
+        stats = TM.summarize_chunk(0, 0, 0, 1, vec,
+                                   TM.counter_snapshot(carry), 1e-3)
+        assert stats.l_e_p99 == 0.0 and stats.completions == 0.0
+
+    def test_compare_match_sets_empty_reference(self):
+        rep = Q.compare_match_sets([set()], [set()])
+        assert rep.recall == 1.0 and rep.fn_ratio == 0.0
+        rep = Q.compare_match_sets([{(1, 2, 3)}], [set()])
+        assert rep.recall == 1.0 and rep.n_spurious == 1
+        rep = Q.compare_match_sets([set(), set()], [set(), {(0, 1, 5)}])
+        assert rep.recall == 0.0 and rep.fn_ratio == 1.0
+
+    def test_lb_violations_empty_run(self):
+        empty = eng.RunResult(
+            complex_count=np.zeros(1), pms_created=np.zeros(1),
+            pms_shed=0.0, shed_calls=0.0, overflow=0.0, ebl_dropped=0.0,
+            l_e=np.zeros(0), n_pm=np.zeros(0), carry=None)
+        res = runner.ExperimentResult(
+            shedder="none", fn=0.0, match_probability=0.0, max_rate=0.0,
+            result=empty, ground_truth=empty, latency_bound=0.005)
+        assert res.lb_violations == 0.0
+        assert res.lb_compliance == 1.0
+
+    def test_degradation_point_requires_matches(self):
+        empty = eng.RunResult(
+            complex_count=np.zeros(1), pms_created=np.zeros(1),
+            pms_shed=0.0, shed_calls=0.0, overflow=0.0, ebl_dropped=0.0,
+            l_e=np.zeros(0), n_pm=np.zeros(0), carry=None, matches=None)
+        with pytest.raises(ValueError, match="emit_matches"):
+            Q.degradation_point(empty, empty)

@@ -221,6 +221,78 @@ class TestChunkBuffer:
         for a, b in zip(jax.tree.leaves(piece), jax.tree.leaves(ev)):
             assert a is not b
 
+    def test_zero_length_push(self):
+        """An empty push is a no-op at every buffer state: empty buffer,
+        buffered tail, and interleaved with real pushes."""
+        buf = RT.ChunkBuffer(64)
+        start, region, n = buf.push_region(self._ev(0))
+        assert (start, region, n) == (0, None, 0) and buf.pending == 0
+        assert buf.push(self._ev(0)) == [] and buf.drain() == []
+        # with a buffered tail the empty push must not disturb it
+        buf.push(self._ev(50))
+        assert buf.push(self._ev(0)) == [] and buf.pending == 50
+        got = buf.push(self._ev(30))
+        assert [(s, RT.num_events(e)) for s, e in got] == [(0, 64)]
+        assert buf.pending == 16
+
+    def test_zero_length_push_through_runtime(self, setup):
+        """StreamRuntime.push of an empty batch returns no stats and does
+        not perturb the stream (bitwise)."""
+        _, cfg, model, make_events = setup
+        ev = make_events(0)
+        c_mono, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        srt = RT.StreamRuntime(cfg, model,
+                               rt=RT.RuntimeConfig(chunk_size=256))
+        assert srt.push(RT.slice_events(ev, 0, 0)) == []
+        srt.push(ev)
+        assert srt.push(RT.slice_events(ev, 0, 0)) == []
+        srt.flush()
+        _assert_tree_equal(c_mono, srt.carry, "empty pushes interleaved")
+
+    def test_push_larger_than_one_group(self, setup):
+        """A single push spanning MANY chunk groups (here 2000 events =
+        8 chunks at group_chunks=3: groups of 3/3/2 + a short tail) splits
+        correctly and stays bitwise-identical to the monolithic scan."""
+        _, cfg, model, make_events = setup
+        ev = make_events(0)
+        c_mono, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        srt = RT.StreamRuntime(cfg, model, rt=RT.RuntimeConfig(
+            chunk_size=250, group_chunks=3))
+        stats = srt.push(ev, flush=True)
+        assert len(stats) == 8   # 2000 events = 8 chunks, groups of 3/3/2
+        _assert_tree_equal(c_mono, srt.carry, "one push, many groups")
+
+    def test_ragged_pushes_interleaved_with_refresh_boundaries(self, setup):
+        """Ragged pushes + grouped dispatch + refresh cadence: groups must
+        truncate at refresh boundaries regardless of push phase, so the
+        grouped runtime refreshes on exactly the same chunks — and ends in
+        exactly the same state — as chunk-at-a-time execution."""
+        specs, cfg, model, make_events = setup
+        ev = make_events(0)
+        rcfg = RT.RefreshConfig(every_chunks=3, min_observations=64.0)
+
+        def run(group_chunks, sizes):
+            srt = RT.StreamRuntime(
+                cfg, model, specs=specs,
+                rt=RT.RuntimeConfig(chunk_size=200, refresh=rcfg,
+                                    group_chunks=group_chunks))
+            s = 0
+            for sz in sizes:
+                srt.push(RT.slice_events(ev, s, min(s + sz, N_EVENTS)))
+                s += sz
+            srt.flush()
+            return srt
+
+        sizes = [130, 470, 900, 57, 443]   # ragged, refresh-unaligned
+        grouped = run(4, sizes)
+        serial = run(1, [N_EVENTS])
+        _assert_tree_equal(serial.carry, grouped.carry,
+                           "grouped+ragged vs serial with refresh")
+        assert [c.refreshed for c in grouped.telemetry.chunks] \
+            == [c.refreshed for c in serial.telemetry.chunks]
+        assert grouped.refresh_state.refresh_count \
+            == serial.refresh_state.refresh_count > 0
+
 
 class TestRefresh:
     def test_refresh_updates_tables_and_latency_model(self, setup):
