@@ -20,6 +20,11 @@ gates on regression):
       blocks amortize the per-block machinery).
   block_sweep   single-lane large-store events/s per W ∈ {8, 32, 128}
       — the block-size tuning artifact CI uploads per PR.
+  overload_sweep   single-lane large-store events/s at overload
+      1.0/1.2/1.4/1.6× — the tentpole's flat-throughput story (Alg-2
+      fires resolve in-kernel).  retention_1p4 (= ev/s at 1.4× ÷
+      unloaded) is gated ≥0.70 per PR, plus a machine-normalized
+      absolute floor at 1.4×.
   chunk_sweep   single-lane chunked runtime (auto-grouped chunk groups,
       donated carry+events, fused device-side telemetry) vs the
       monolithic scan.  Target: chunk=256 overhead ≤5%.
@@ -77,19 +82,62 @@ def _blocked(cfg: eng.EngineConfig, w: int | None = None):
         block_events=w if w is not None else cfg.block_events)
 
 
-def _paper_workload(n: int, max_pms: int, seed: int = 7):
+def _paper_workload(n: int, max_pms: int, seed: int = 7,
+                    rate_mult: float = pp.RATE_MULTIPLIER):
     specs = [pat.make_q1(window_size=3000, num_symbols=10)]
     cp = pat.compile_patterns(specs)
     cfg = runner.default_config(cp, max_pms=max_pms,
                                 latency_bound=pp.LATENCY_BOUND,
                                 shedder=eng.SHED_PSPICE, **pp.COST)
     model = eng.make_model(cp, cfg)
-    # ~120% of what the cost model sustains at a half-full store.
-    rate = pp.RATE_MULTIPLIER / (cfg.c_base + cfg.c_match * 0.5 * max_pms)
+    # rate_mult × what the cost model sustains at a half-full store
+    # (the default is the paper's ~120% overload).
+    rate = rate_mult / (cfg.c_base + cfg.c_match * 0.5 * max_pms)
     raw = streams.gen_stock(n, num_symbols=500, pattern_symbols=10,
                             hot_fraction=0.9, p_class=0.03, seed=seed)
     ev = streams.classify(specs, raw, rate=rate, seed=0)
     return cfg, model, ev
+
+
+_OVERLOAD_LB = 0.05  # bound tight enough that queue growth crosses it
+                     # within a bench-sized cell (pp.LATENCY_BOUND=1.0
+                     # needs the paper's ~60k-event stream to fire)
+
+
+def _overload_workload(n: int, max_pms: int, seed: int = 7):
+    """Calibrated true-overload workload for the overload sweep.
+
+    ``_paper_workload``'s hand-derived rate assumes half-full-store
+    service cost, but the store settles at ~10 live PMs on bench-sized
+    streams, so actual service is ~100× faster than that estimate and
+    the queue never builds — Algorithm 2 never fires.  This instead
+    follows ``runner.run_experiment``: a warm unloaded run fits the
+    latency model, ``max_rate = 1/f(steady_n_pm)`` is what the engine
+    sustains, and arrivals at ``max_rate × ratio`` are a TRUE overload
+    ratio.  Returns ``(cfg, model, classify)`` where ``classify(mult)``
+    yields the stream arriving at ``mult ×`` the sustainable rate.
+    """
+    specs = [pat.make_q1(window_size=3000, num_symbols=10)]
+    cp = pat.compile_patterns(specs)
+    cfg = runner.default_config(cp, max_pms=max_pms,
+                                latency_bound=_OVERLOAD_LB,
+                                shedder=eng.SHED_PSPICE, **pp.COST)
+    raw_warm = streams.gen_stock(2000, num_symbols=500, pattern_symbols=10,
+                                 hot_fraction=0.9, p_class=0.2,
+                                 seed=seed + 1)
+    warm = streams.classify(specs, raw_warm, rate=1.0, seed=seed)
+    built = runner.build_model(specs, cfg, warm)
+    model = eng.make_model(cp, cfg, ut_tables=built.ut_stacked,
+                           ut_bins=built.ut_bins, f_model=built.f_model,
+                           g_model=built.g_model)
+    raw = streams.gen_stock(n, num_symbols=500, pattern_symbols=10,
+                            hot_fraction=0.9, p_class=0.2, seed=seed)
+
+    def classify(mult: float):
+        return streams.classify(specs, raw, rate=built.max_rate * mult,
+                                seed=0)
+
+    return cfg, model, classify
 
 
 def _refuse_degraded() -> None:
@@ -161,6 +209,37 @@ def bench_block_sweep(n: int, max_pms: int, reps: int,
              "events_per_s": _time_engine(_blocked(cfg, w), model, ev, n,
                                           reps)}
             for w in ws]
+
+
+def bench_overload_sweep(n: int, max_pms: int, reps: int,
+                         ratios=(1.0, 1.2, 1.4, 1.6)) -> dict:
+    """The tentpole's flat-throughput story: fused pallas_block ev/s as a
+    function of overload ratio.  Algorithm-2 fires are handled inside the
+    kernel, so ev/s must stay ~flat across the sweep instead of decaying
+    toward per-event throughput at 1.4× (the PR-5 bail/replay behavior).
+    The 1.4× cell also times the legacy per-event engine as the gate's
+    machine-speed probe; retention_1p4 (ev/s at 1.4× ÷ unloaded) is the
+    machine-independent headline the CI gate floors at 0.70.  The
+    workload is the calibrated one (``_overload_workload``): the ratio
+    axis is relative to the fitted sustainable rate, so ratios > 1.0
+    actually fire the shed (shed_calls is recorded per row as proof)."""
+    cfg, model, classify = _overload_workload(n, max_pms)
+    rows = []
+    for mult in ratios:
+        ev = classify(mult)
+        cfg_b = _blocked(cfg)
+        carry, _ = eng.run_engine(cfg_b, model, ev, eng.init_carry(cfg_b))
+        row = {"overload": mult, "max_pms": max_pms, "n_events": n,
+               "shed_calls": float(carry.shed_calls),
+               "events_per_s_new": _time_engine(cfg_b, model, ev, n, reps)}
+        if mult == 1.4:
+            row["events_per_s_legacy"] = _time_engine(_legacy(cfg), model,
+                                                      ev, n, reps)
+        rows.append(row)
+    by = {r["overload"]: r["events_per_s_new"] for r in rows}
+    return {"rows": rows,
+            "retention_1p4": by[1.4] / by[1.0] if 1.0 in by and 1.4 in by
+            else None}
 
 
 def bench_lanes(num_lanes: int, n_per_lane: int, max_pms: int,
@@ -262,11 +341,44 @@ def _gate_cell(out: dict, base: dict, cell: str, norm: float,
     return ok
 
 
+def _gate_overload(out: dict, base: dict) -> bool:
+    """The overload gate, two halves: (1) intra-run retention — ev/s at
+    1.4× overload must hold ≥70% of the unloaded rate (machine-free: a
+    ratio of walls from the SAME run, so it catches the fused shed path
+    reverting to bail/replay no matter the box); (2) when the baseline
+    has an overload_sweep, the machine-normalized ev/s floor at 1.4×
+    (the 2048-slot store's 0.65 factor — same variance class as
+    single_lane_large)."""
+    sw = out.get("overload_sweep")
+    if not sw or sw.get("retention_1p4") is None:
+        return True
+    ret = sw["retention_1p4"]
+    ok = ret >= 0.70
+    print(f"# gate[overload@1.4x]: retention={ret:.2f} (floor 0.70) → "
+          f"{'PASS' if ok else 'FAIL'}", file=sys.stderr)
+    bsw = base.get("overload_sweep")
+    if bsw:
+        now = {r["overload"]: r for r in sw["rows"]}
+        was = {r["overload"]: r for r in bsw["rows"]}
+        if 1.4 in now and 1.4 in was and "events_per_s_legacy" in was[1.4]:
+            norm = (now[1.4]["events_per_s_legacy"] /
+                    was[1.4]["events_per_s_legacy"])
+            floor = 0.65 * was[1.4]["events_per_s_new"] * norm
+            ok14 = now[1.4]["events_per_s_new"] >= floor
+            print(f"# gate[overload@1.4x abs]: "
+                  f"new={now[1.4]['events_per_s_new']:.0f} ev/s, "
+                  f"baseline={was[1.4]['events_per_s_new']:.0f}, "
+                  f"machine-norm={norm:.2f}, floor={floor:.0f} → "
+                  f"{'PASS' if ok14 else 'FAIL'}", file=sys.stderr)
+            ok &= ok14
+    return ok
+
+
 def check_regression(out: dict, baseline_path: str) -> bool:
     """Machine-normalized ±20% events/sec gate vs the checked-in baseline
     on BOTH single-lane cells (paper config and the 2048-slot store this
-    PR's kernel targets), plus the chunk=256 overhead ceiling.  Returns
-    True when passing."""
+    PR's kernel targets), the 1.4×-overload cell (retention + absolute),
+    plus the chunk=256 overhead ceiling.  Returns True when passing."""
     with open(baseline_path) as f:
         base = json.load(f)
     norm = (out["single_lane"]["events_per_s_legacy"] /
@@ -294,10 +406,12 @@ def check_regression(out: dict, baseline_path: str) -> bool:
               f"noise allowance) → {'PASS' if ok256 else 'FAIL'}",
               file=sys.stderr)
         ok &= ok256
+    ok &= _gate_overload(out, base)
     if not ok:
         print("# events/s regressed past a cell's floor (20% paper cell "
-              "/ 35% large cell) or chunk overhead blew the ceiling, vs "
-              "checked-in baseline", file=sys.stderr)
+              "/ 35% large cell / 0.70 overload retention) or chunk "
+              "overhead blew the ceiling, vs checked-in baseline",
+              file=sys.stderr)
     return ok
 
 
@@ -346,6 +460,13 @@ def main(argv=None) -> None:
     for r in out["block_sweep"]:
         print(f"block_sweep:W={r['block_events']},"
               f"{r['events_per_s']:.0f},")
+    out["overload_sweep"] = bench_overload_sweep(n_large, 2048, reps)
+    for r in out["overload_sweep"]["rows"]:
+        print(f"overload_sweep:x{r['overload']},"
+              f"{r['events_per_s_new']:.0f},"
+              f"shed_calls={r['shed_calls']:.0f}")
+    print(f"overload_sweep:retention_1p4,"
+          f"{out['overload_sweep']['retention_1p4']:.3f},")
     lanes = bench_lanes(L, n_lane, 64, reps)
     out["lanes"] = lanes
     print(f"lanes:L={L},{lanes['events_per_s_new']:.0f},"

@@ -53,6 +53,24 @@ def _workload(n: int = 96, max_pms: int = 48, seed: int = 0):
     return cfg, model, ev
 
 
+def _workload_fired(n: int = 96, max_pms: int = 48, seed: int = 0):
+    """Spawn-heavy overloaded fixture (tight bound, p_class=0.5): the
+    Algorithm-1 check fires many times per block, so tracing it keeps the
+    fused in-kernel Algorithm-2 path — and the replay driver it
+    retired — under contract in the regime they exist for."""
+    specs = [pat.make_q1(window_size=400, num_symbols=4)]
+    cp = pat.compile_patterns(specs)
+    cfg = runner.default_config(cp, max_pms=max_pms, latency_bound=0.001,
+                                gather_stats=True,
+                                shedder=eng.SHED_PSPICE, **_COST)
+    model = eng.make_model(cp, cfg)
+    rate = 3.0 / (cfg.c_base + cfg.c_match * 0.3 * max_pms)
+    raw = streams.gen_stock(n, num_symbols=50, pattern_symbols=4,
+                            p_class=0.5, seed=100 + seed)
+    ev = streams.classify(specs, raw, rate=rate, seed=seed)
+    return cfg, model, ev
+
+
 def _cells(quick: bool):
     """(backend, shedder) grid for run_engine; quick keeps one row and
     one column so tests touch every backend and every shedder once."""
@@ -90,6 +108,27 @@ def check_all(quick: bool = False, out: str | None = None) -> dict:
         cell = f"run_engine[{backend}/{shedder}]"
         art = R.trace_artifact(eng.run_engine, cfg, model, ev,
                                eng.init_carry(cfg), name=cell, n_events=n)
+        findings += _findings_for(art, c_run)
+
+    # ---- fired-heavy cells: the block kernel in the overload regime -----
+    # The fused in-kernel Algorithm 2 (default) and the legacy replay
+    # driver, traced on a workload where the shed actually fires many
+    # times per block — so the census/alias rules see the overload path
+    # as the hot path, not just the unfired fast path.  Quick mode keeps
+    # the fused pspice cell (the tentpole's structure).
+    cfg_f, model_f, ev_f = _workload_fired()
+    n_f = ev_f.ev_class.shape[0]
+    fired_cells = [(eng.SHED_PSPICE, "fused")]
+    if not quick:
+        fired_cells += [(eng.SHED_PMBL, "fused"), (eng.SHED_PSPICE,
+                                                   "replay")]
+    for shedder, mode in fired_cells:
+        cfg = dataclasses.replace(cfg_f, backend=eng.BACKEND_PALLAS_BLOCK,
+                                  shedder=shedder, block_shed=mode)
+        cell = f"run_engine[fired-heavy/{mode}/{shedder}]"
+        art = R.trace_artifact(eng.run_engine, cfg, model_f, ev_f,
+                               eng.init_carry(cfg), name=cell,
+                               n_events=n_f)
         findings += _findings_for(art, c_run)
 
     # ---- run_engine_chunk (donation must hold on every backend) ---------

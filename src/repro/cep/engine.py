@@ -79,15 +79,22 @@ class EngineConfig:
     # bitwise-equivalent (tests/test_backend.py); "pallas_block" replaces
     # the per-event scan with one fused kernel launch per
     # ``block_events`` events (kernels/block_step.py, DESIGN.md §10) —
-    # the PM store stays resident across the block, the scan runs over
-    # blocks, and blocks split at Algorithm-1 fire points so the
-    # host-level Algorithm-2 shed path is reused unchanged.  Also
-    # bitwise-equivalent (tests/test_block_backend.py, eval/oracle.py).
+    # the PM store stays resident across the block and the scan runs
+    # over blocks.  Algorithm-2 fires are handled IN-KERNEL by default
+    # (``block_shed="fused"``: the threshold select runs against the
+    # store-resident utility column, PRNG keys are precomputed host-side
+    # and threaded in); ``block_shed="replay"`` pins the legacy
+    # block-split protocol — bail at the fire, replay that event through
+    # the host ``_step``, re-enter — which stays as the oracle, and is
+    # forced whenever ``shed_plan="sort"`` (the fused path implements
+    # the threshold plan only).  All bitwise-equivalent
+    # (tests/test_block_backend.py, eval/oracle.py).
     # spawn_alloc / shed_plan keep the legacy O(N log N) paths selectable
     # as oracles and as the baseline benchmarks/bench_engine.py measures
     # against.
     backend: str = BACKEND_XLA          # "xla" | "pallas" | "pallas_block"
     block_events: int = 32              # W — events fused per block launch
+    block_shed: str = "fused"           # "fused" (in-kernel Alg. 2) | "replay"
     spawn_alloc: str = "cumsum"         # "cumsum" (O(N)) | "argsort" (legacy)
     shed_plan: str = "threshold"        # "threshold" (O(N)) | "sort" (legacy)
     # Static pattern census (DESIGN.md §8): when every pattern shares one
@@ -178,6 +185,9 @@ class EngineConfig:
         if self.shed_plan not in ("threshold", "sort"):
             raise ValueError(f"unknown shed_plan {self.shed_plan!r}; "
                              "expected 'threshold' or 'sort'")
+        if self.block_shed not in ("fused", "replay"):
+            raise ValueError(f"unknown block_shed {self.block_shed!r}; "
+                             "expected 'fused' or 'replay'")
         if self.kinds not in ("seq", "any", "mixed"):
             raise ValueError(f"unknown kinds census {self.kinds!r}; "
                              "expected 'seq', 'any' or 'mixed'")
@@ -743,21 +753,29 @@ def _pad_event_blocks(events: EventBatch, n: int, w: int,
 @count_traces("cep._run_block")
 def _run_block(cfg: EngineConfig, model: EngineModel, carry: Carry,
                blk: tuple, i0: Array, n_valid: Array) -> tuple[Carry, dict]:
-    """One event block through the fused kernel, splitting at shed fire
-    points (DESIGN.md §10).
+    """One event block through the fused kernel (DESIGN.md §10).
 
-    The kernel commits events until the Algorithm-1 check fires; the
-    fired event is then replayed through the ordinary ``_step`` — which
-    re-derives the identical overload decision from the committed carry
-    and runs the host-level Algorithm-2 shed — and the kernel re-enters
-    at the next event.  Shedders that never run Algorithm 2 (none, E-BL)
-    need exactly one launch per block.
+    Default (``block_shed="fused"``): exactly ONE launch per block for
+    every shedder — Algorithm-2 fires are handled inside the kernel, so
+    overload is the fast path, not an escape hatch.
+
+    Legacy oracle (``block_shed="replay"``, or any ``shed_plan="sort"``
+    config): the kernel commits events until the Algorithm-1 check
+    fires; the fired event is then replayed through the ordinary
+    ``_step`` — which re-derives the identical overload decision from
+    the committed carry and runs the host-level Algorithm-2 shed — and
+    the kernel re-enters at the next event.  Fire-at-the-tail re-entry
+    is safe by construction: with ``fire_idx + 1 == n_valid`` the while
+    cond is immediately false, so no zero-width relaunch happens (under
+    vmap the batched while keeps finished lanes on identity relaunches;
+    non-fired lanes carry the ``fire_idx = W`` sentinel, whose replay
+    reads are clamped and discarded by the per-lane ``fired`` select).
     """
     W = cfg.block_events
     interp = kops.default_interpret()
     ev_blk = EventBatch(*blk)
 
-    if cfg.shedder not in (SHED_PSPICE, SHED_PMBL):
+    if cfg.shedder not in (SHED_PSPICE, SHED_PMBL) or kblock.fused_shed(cfg):
         carry, rows, _, _ = kblock.block_step(
             cfg, model, carry, ev_blk, i0, 0, n_valid, interpret=interp)
         return carry, rows
@@ -838,9 +856,12 @@ def _scan_event_blocks_lanes(cfg: EngineConfig, model: EngineModel,
     """Lane-batched ``_scan_event_blocks``: the fused kernel vmaps over
     the lane axis (lanes are independent operators — per-lane results
     are bitwise those of the single-lane block scan, which equals the
-    per-event engine).  Fire handling composes with vmap: the while loop
-    runs until every lane committed its block, and the replayed
-    ``_step`` commits only on lanes whose own check fired."""
+    per-event engine).  Fire handling composes with vmap in both shed
+    modes: fused (default) needs nothing special — each lane's kernel
+    resolves its own Algorithm-2 fires in the single launch; on the
+    legacy replay path the batched while loop runs until every lane
+    committed its block (finished lanes relaunch as identity) and the
+    replayed ``_step`` commits only on lanes whose own check fired."""
     L, n = events.ev_class.shape[0], events.ev_class.shape[1]
     W = cfg.block_events
     blocks, nb = _pad_event_blocks(events, n, W, axis=1)

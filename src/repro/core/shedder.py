@@ -30,7 +30,12 @@ from repro.core import utility as util
 
 Array = jax.Array
 
-_BIG = jnp.float32(3.4e38)   # finite inactive-slot sentinel (f32-safe inf)
+# Finite inactive-slot sentinel (f32-safe inf).  A PYTHON float on
+# purpose: a module-level jnp array would be a captured constant inside
+# the block megakernel's Pallas trace (kernels/block_step.py runs
+# ``threshold_drop_mask`` in-kernel); a weak scalar inlines, and
+# promotes to the identical f32 value.
+_BIG = 3.4e38
 
 
 def pspice_utilities(stacked_tables: Array, bin_sizes: Array,

@@ -11,19 +11,36 @@ IO-aware tiling trick of ``kernels/flash_attention.py`` applied to the
 CEP hot loop: the per-event jnp step streams the whole (P, N) store
 through HBM ~6 times per event; here it is loaded once per W events.
 
-Shedding protocol (block split, DESIGN.md §10): Algorithm 2 never runs
-in-kernel.  The loop evaluates the Algorithm-1 decision with TENTATIVE
-pre-shed values (window expiry applied to locals only) and, at the first
-event where ``shed ∧ ρ>0``, stops committing and reports ``(fired,
-fire_idx)``.  The engine driver (``engine._scan_event_blocks``) then
-replays that one event through the ordinary ``_step`` — which re-derives
-the identical decision from the committed carry, splits the PRNG key and
-runs the host-level Algorithm-2 path — and re-enters the kernel at
-``fire_idx + 1``.  Every committed quantity therefore goes through
-arithmetic bit-identical to the xla backend's (same reduction shapes and
-orders; the one-hot advance touches exactly one nonzero per row), which
-is what lets tests/test_block_backend.py and the eval/oracle.py suite
-demand EXACT equality.
+Shedding protocol — FUSED (the default, ``cfg.block_shed="fused"``):
+a ``shed ∧ ρ>0`` event is handled INSIDE the loop.  Under a
+``lax.cond`` (so unfired events pay nothing) the kernel recomputes the
+store-resident utility column (pSPICE: the interpolated table lookup of
+``core.utility.multi_pattern_lookup``, arithmetic-identical; PM-BL: a
+host-precomputed row of iid uniforms) and applies the very same O(N)
+histogram-refinement select the host paths use —
+``core.shedder.threshold_drop_mask`` with the shared ``bucket_edges`` —
+then pays the shed cost, bumps pms_shed/shed_calls and continues to the
+normal advance/spawn path of the SAME event.  PRNG discipline survives
+fusion because the wrapper precomputes the whole per-fire key chain
+host-side (``keys[t+1], subs[t] = split(keys[t])``): the kernel only
+counts fires, the wrapper advances ``carry.key`` to ``chain[n_fires]``,
+and PM-BL's uniforms are drawn from exactly the ``sub`` the host path
+would have used for the same fire ordinal.  A block with F fires is
+still ONE launch.
+
+Legacy protocol (block split, ``cfg.block_shed="replay"`` — kept as the
+oracle, and the forced path for ``shed_plan="sort"``): the loop stops
+committing at the first ``shed ∧ ρ>0`` event and reports ``(fired,
+fire_idx)``; the engine driver replays that event through the ordinary
+``_step`` — which re-derives the identical decision from the committed
+carry, splits the PRNG key and runs the host-level Algorithm-2 path —
+and re-enters the kernel at ``fire_idx + 1``.
+
+Either way every committed quantity goes through arithmetic
+bit-identical to the xla backend's (same reduction shapes and orders;
+the one-hot advance touches exactly one nonzero per row), which is what
+lets tests/test_block_backend.py and the eval/oracle.py suite demand
+EXACT equality.
 
 Slot allocation matches the engine's free-list compaction without its
 full-store scatter: candidate r takes the (r+1)-th lowest-index inactive
@@ -49,8 +66,22 @@ from jax.experimental import pallas as pl
 
 from repro.cep import patterns as pat
 from repro.core import overload as ovl
+from repro.core import shedder as shd
 
 SHED_PSPICE, SHED_PMBL, SHED_EBL = "pspice", "pmbl", "ebl"
+
+SHED_NBINS = 128   # the engine shed paths' histogram width (kops default)
+
+
+def fused_shed(cfg) -> bool:
+    """True when this config runs Algorithm 2 inside the block kernel.
+
+    The fused path implements the O(N) threshold plan only; the sort
+    plan (the argsort oracle) and an explicit ``block_shed="replay"``
+    pin the legacy block-split protocol instead."""
+    return (cfg.shedder in (SHED_PSPICE, SHED_PMBL)
+            and cfg.shed_plan == "threshold"
+            and getattr(cfg, "block_shed", "fused") == "fused")
 
 
 def _block_kernel(*refs, spec):
@@ -61,6 +92,7 @@ def _block_kernel(*refs, spec):
                              spec["K"], spec["S"], spec["W"])
     kinds, spawn_modes = spec["kinds"], spec["spawn_modes"]
     shedder, emit, stats = spec["shedder"], spec["emit"], spec["stats"]
+    fused = spec["fused"]
     f32, i32 = jnp.float32, jnp.int32
 
     it = iter(refs)
@@ -72,6 +104,10 @@ def _block_kernel(*refs, spec):
     (ws_ref, fin_ref, ub_ref, kind_ref, sm_ref, sc_ref, pc_ref) = (
         nxt() for _ in range(7))
     cplx_ref, crtd_ref, latn_ref, latl_ref = (nxt() for _ in range(4))
+    if fused and shedder == SHED_PSPICE:
+        utt_ref, utb_ref = nxt(), nxt()
+    if fused and shedder == SHED_PMBL:
+        unif_ref = nxt()
     if stats:
         obsc_ref, obsr_ref = nxt(), nxt()
     # outputs
@@ -100,14 +136,34 @@ def _block_kernel(*refs, spec):
     is_seq = (kindv == pat.KIND_SEQ)[:, None]
     pidx = jax.lax.broadcasted_iota(i32, (P, 1), 0)[:, 0]   # (P,)
 
+    # Fused-shed residents: the pSPICE utility table / the host-drawn
+    # PM-BL uniforms, loaded once per block like the rest of the state.
+    if fused and shedder == SHED_PSPICE:
+        ut_tab = utt_ref[...]                 # (P, B, M) f32
+        ut_bs = utb_ref[...]                  # (P,)      f32 bin sizes
+    if fused and shedder == SHED_PMBL:
+        unif = unif_ref[...]                  # (W, P*N)  f32
+
+    def _cmp_hist(u, lo, hi):
+        """Comparison-based bucket counter over the SHARED ``bucket_edges``
+        (the same math as ``kernels.shed_select.utility_histogram_pallas``,
+        inlined: no nested pallas_call).  Only used when compiling for the
+        MXU — interpret mode keeps ``threshold_drop_mask``'s own jnp
+        scatter-add histogram, the literal host-path function.  NaN
+        (masked-out) entries fail both comparisons and count nowhere;
+        masked-in entries lie in [lo, hi] so both bucketings agree."""
+        edges = shd.bucket_edges(lo, hi, SHED_NBINS)
+        inb = (u[:, None] >= edges[None, :-1]) & (u[:, None] < edges[None, 1:])
+        return jnp.sum(inb, axis=0, dtype=i32)
+
     def row_i32(ref, j):
         return pl.load(ref, (pl.dslice(j, 1), slice(None)))[0]
 
     def body(st):
         j, carry = st
         (active, state, open_idx, bind, idset, ring, ring_ptr, n_act,
-         sim, ema, prev, eblf, cplx, crtd, ovf, ebld, lat_n, lat_l,
-         lat_ptr, obs_c, obs_r, fired, fire_idx) = carry
+         sim, ema, prev, eblf, cplx, crtd, ovf, ebld, pshed, scalls,
+         lat_n, lat_l, lat_ptr, obs_c, obs_r, nfire, fire_idx) = carry
         i = i0 + j
         ec = row_i32(evc_ref, j)                            # (P,)
         eb = row_i32(evb_ref, j)
@@ -116,7 +172,9 @@ def _block_kernel(*refs, spec):
         er = pl.load(evr_ref, (pl.dslice(j, 1),))[0]
         eraw = pl.load(eraw_ref, (pl.dslice(j, 1),))[0]
         arr = pl.load(arr_ref, (pl.dslice(j, 1),))[0]
-        pred = (j >= s) & (j < n_valid) & ~fired
+        pred = (j >= s) & (j < n_valid)
+        if not fused:
+            pred = pred & (nfire == 0)        # replay: stop at first fire
 
         # -- 1-2. tentative pre-shed: expiry, queueing, Algorithm 1 -------
         expired_t = active & ((i - open_idx) >= wsz)
@@ -133,8 +191,11 @@ def _block_kernel(*refs, spec):
                                       spec["latency_bound"],
                                       spec["safety_buffer"], lazy=True)
             fire_j = pred & dec.shed & (dec.rho > 0)
-        commit = pred & ~fire_j
-        fired2 = fired | fire_j
+        # Fused: the fire event is handled in-kernel and commits like any
+        # other.  Replay: the fire event is NOT committed — the driver
+        # replays it through the host ``_step``.
+        commit = pred if fused else pred & ~fire_j
+        nfire2 = nfire + fire_j.astype(i32)
         fire_idx2 = jnp.where(fire_j, j, fire_idx)
 
         # -- committed pre-shed state ------------------------------------
@@ -148,6 +209,68 @@ def _block_kernel(*refs, spec):
                  == ring_ptr[:, None]), i, ring)
             ring_ptr = jnp.where(opens, (ring_ptr + 1) % K, ring_ptr)
         sim1 = jnp.where(commit, sim1, sim)
+
+        # -- 2b. in-kernel Algorithm 2 (fused shed path) ------------------
+        if fused:
+            def run_shed(_):
+                # Mirrors engine._shed_now on the committed (post-expiry)
+                # store: utility column → threshold_drop_mask.  Everything
+                # here reads loop-carried VALUES (no refs), so the cond
+                # stays a plain jaxpr branch.
+                if shedder == SHED_PSPICE:
+                    # core.utility.multi_pattern_lookup, (P, N)-shaped:
+                    # identical arithmetic, so active slots match the xla
+                    # path bit for bit (inactive slots are masked anyway).
+                    B = spec["B"]
+                    r_w = wsz - (i - open_idx)               # (P, N) i32
+                    pos = jnp.clip(r_w.astype(f32) / ut_bs[:, None] - 1.0,
+                                   0.0, B - 1.0)
+                    b0 = jnp.floor(pos).astype(i32)
+                    b1 = jnp.minimum(b0 + 1, B - 1)
+                    frac = pos - b0.astype(f32)
+                    if spec["mxu"]:
+                        # One-hot state/bin extraction (exactly one nonzero
+                        # per reduction ⇒ exact), like the advance lookup.
+                        oh_s = (state[:, :, None] == jax.lax.broadcasted_iota(
+                            i32, (P, N, M), 2)).astype(f32)
+                        per_bin = (ut_tab[:, None, :, :] *
+                                   oh_s[:, :, None, :]).sum(-1)  # (P, N, B)
+                        biota = jax.lax.broadcasted_iota(i32, (P, N, B), 2)
+                        u0 = (per_bin *
+                              (b0[..., None] == biota).astype(f32)).sum(-1)
+                        u1 = (per_bin *
+                              (b1[..., None] == biota).astype(f32)).sum(-1)
+                    else:
+                        tflat = ut_tab.reshape(-1)
+                        u0 = jnp.take(tflat, ((pidx[:, None] * B + b0) * M +
+                                              state).reshape(-1),
+                                      mode="clip").reshape(P, N)
+                        u1 = jnp.take(tflat, ((pidx[:, None] * B + b1) * M +
+                                              state).reshape(-1),
+                                      mode="clip").reshape(P, N)
+                    u = (u0 * (1.0 - frac) + u1 * frac).reshape(-1)
+                else:
+                    # PM-BL: row ``nfire`` of the host-precomputed uniforms
+                    # — exactly the draw the host path makes from the
+                    # (nfire+1)-th key split of this block's carry key.
+                    u = jax.lax.dynamic_index_in_dim(
+                        unif, jnp.minimum(nfire, W - 1), 0, keepdims=False)
+                hist = _cmp_hist if spec["mxu"] else None
+                return shd.threshold_drop_mask(
+                    active1.reshape(-1), u, dec.rho, nbins=SHED_NBINS,
+                    hist_fn=hist).reshape(P, N)
+
+            active1 = jax.lax.cond(fire_j, run_shed,
+                                   lambda _: active1, 0)
+            n_act1 = jnp.where(fire_j,
+                               jnp.sum(active1, axis=1, dtype=i32), n_act1)
+            pshed = pshed + jnp.where(
+                fire_j,
+                (n_pm_i - jnp.sum(active1, dtype=i32)).astype(f32), 0.0)
+            scalls = scalls + jnp.where(fire_j, 1.0, 0.0)
+            sim1 = sim1 + jnp.where(
+                fire_j,
+                spec["c_shed_base"] + spec["c_shed_pm"] * n_pm_f, 0.0)
 
         # -- 3. E-BL drop + inter-arrival EMA ----------------------------
         gap = jnp.maximum(arr - prev, 1e-9)
@@ -334,8 +457,8 @@ def _block_kernel(*refs, spec):
                  dropped_e.astype(i32)[None])
         return j + 1, (active3, state3, open3, bind3, idset, ring,
                        ring_ptr, n_act3, sim, ema, prev, eblf, cplx,
-                       crtd, ovf, ebld, lat_n, lat_l, lat_ptr, obs_c,
-                       obs_r, fired2, fire_idx2)
+                       crtd, ovf, ebld, pshed, scalls, lat_n, lat_l,
+                       lat_ptr, obs_c, obs_r, nfire2, fire_idx2)
 
     active0 = act_ref[...] != 0
     obs0 = (obsc_ref[...], obsr_ref[...]) if stats else (
@@ -345,20 +468,25 @@ def _block_kernel(*refs, spec):
               jnp.sum(active0, axis=1, dtype=jnp.int32),
               fscal[0], fscal[2], fscal[3], fscal[1],
               cplx_ref[...], crtd_ref[...], fscal[4], fscal[5],
+              fscal[11], fscal[12],
               latn_ref[...], latl_ref[...], lat_ptr0,
-              obs0[0], obs0[1], jnp.bool_(False), jnp.int32(W))
-    # Early-exit event loop: start at the re-entry offset s (events
-    # before it were committed by a previous launch) and stop at the
-    # first Algorithm-1 fire or the ragged-tail boundary — a block with
-    # F fires costs O(committed events) total across its F+1 launches,
-    # not F+1 full W-iteration replays.  Rows outside the committed
-    # range stay unwritten; the driver only reads [s, stop).
-    out = jax.lax.while_loop(
-        lambda st: (st[0] < n_valid) & ~st[1][21],
-        body, (s, carry0))[1]
+              obs0[0], obs0[1], jnp.int32(0), jnp.int32(W))
+    # Event loop over [s, n_valid).  Fused mode runs the whole span in
+    # one pass (fires are handled inline, ``nfire`` just counts them for
+    # the wrapper's key-chain advance).  Replay mode early-exits at the
+    # first Algorithm-1 fire — a block with F fires costs O(committed
+    # events) total across its F+1 launches, not F+1 full W-iteration
+    # replays; rows outside the committed range stay unwritten and the
+    # driver only reads [s, stop).
+    if spec["fused"]:
+        loop_cond = lambda st: st[0] < n_valid               # noqa: E731
+    else:
+        loop_cond = lambda st: ((st[0] < n_valid) &          # noqa: E731
+                                (st[1][23] == 0))
+    out = jax.lax.while_loop(loop_cond, body, (s, carry0))[1]
     (active, state, open_idx, bind, idset, ring, ring_ptr, _n_act, sim,
-     ema, prev, eblf, cplx, crtd, ovf, ebld, lat_n, lat_l, lat_ptr,
-     obs_c, obs_r, fired, fire_idx) = out
+     ema, prev, eblf, cplx, crtd, ovf, ebld, pshed, scalls, lat_n, lat_l,
+     lat_ptr, obs_c, obs_r, nfire, fire_idx) = out
     oact_ref[...] = active.astype(jnp.int32)
     ost_ref[...] = state
     ooi_ref[...] = open_idx
@@ -370,9 +498,9 @@ def _block_kernel(*refs, spec):
     ocrtd_ref[...] = crtd
     olatn_ref[...] = lat_n
     olatl_ref[...] = lat_l
-    ofscal_ref[...] = jnp.stack([sim, eblf, ema, prev, ovf, ebld])
-    oiscal_ref[...] = jnp.stack([fired.astype(jnp.int32), fire_idx,
-                                 lat_ptr])
+    ofscal_ref[...] = jnp.stack([sim, eblf, ema, prev, ovf, ebld,
+                                 pshed, scalls])
+    oiscal_ref[...] = jnp.stack([nfire, fire_idx, lat_ptr])
     if stats:
         oobsc_ref[...] = obs_c
         oobsr_ref[...] = obs_r
@@ -389,19 +517,29 @@ def block_step(cfg, model, carry, blk, i0, s, n_valid, *,
     ``EngineConfig`` / ``EngineModel`` / ``Carry`` / block-shaped
     ``EventBatch`` (duck-typed; this module never imports the engine).
     Returns ``(carry', rows, fired, fire_idx)`` where ``rows`` is a dict
-    of per-event StepOut columns — valid on ``[s, stop)`` with
-    ``stop = fire_idx if fired else n_valid`` — and ``carry'`` has every
-    event in ``[s, stop)`` committed, bit-identical to the xla step.
+    of per-event StepOut columns.
+
+    Under the FUSED shed plan (``fused_shed(cfg)``) Algorithm-2 fires
+    are handled in-kernel: ``fired`` is always False, rows are valid on
+    all of ``[s, n_valid)``, and ``carry'`` — including ``key`` (advanced
+    down the precomputed split chain once per fire), ``pms_shed`` and
+    ``shed_calls`` — has every valid event committed.  Under the legacy
+    replay plan rows are valid on ``[s, stop)`` with ``stop = fire_idx
+    if fired else n_valid`` and the fired event is left to the driver.
+    Either way every committed event is bit-identical to the xla step.
     """
     P, N, M = cfg.num_patterns, cfg.max_pms, cfg.max_states
     A, K, W = cfg.max_any_ids, cfg.ring_size, cfg.block_events
     S = carry.lat_samples_n.shape[0]
     i32, f32 = jnp.int32, jnp.float32
+    fused = fused_shed(cfg)
     spec = dict(P=P, N=N, M=M, A=A, K=K, S=S, W=W, mxu=not interpret,
+                B=model.ut_tables.shape[1], fused=fused,
                 kinds=cfg.kinds, spawn_modes=cfg.spawn_modes,
                 shedder=cfg.shedder, emit=cfg.emit_matches,
                 stats=cfg.gather_stats,
                 c_base=cfg.c_base, c_match=cfg.c_match, c_ebl=cfg.c_ebl,
+                c_shed_base=cfg.c_shed_base, c_shed_pm=cfg.c_shed_pm,
                 latency_bound=cfg.latency_bound,
                 safety_buffer=cfg.safety_buffer,
                 ebl_backlog_gain=cfg.ebl_backlog_gain,
@@ -420,7 +558,22 @@ def block_step(cfg, model, carry, blk, i0, s, n_valid, *,
                        carry.prev_arrival, carry.overflow,
                        carry.ebl_dropped, model.f_model.a, model.f_model.b,
                        model.g_model.a, model.g_model.b,
-                       model.ebl_raw_mean])
+                       model.ebl_raw_mean, carry.pms_shed,
+                       carry.shed_calls])
+
+    # PRNG discipline under fusion: the host path splits the carry key
+    # once per fire (``key, sub = split(key)``; only PM-BL consumes
+    # ``sub``).  Precompute the whole chain for the worst case of W fires
+    # — the kernel merely COUNTS fires and the wrapper advances the carry
+    # key to ``chain[n_fires]``, so F in-kernel fires leave exactly the
+    # key F host fires would have.  Unused tail splits are pure compute.
+    if fused:
+        def _split(k, _):
+            nk, sub = jax.random.split(k)
+            return nk, (nk, sub)
+        _, (chain_keys, chain_subs) = jax.lax.scan(
+            _split, carry.key, None, length=W)
+        key_chain = jnp.concatenate([carry.key[None], chain_keys], axis=0)
     # Named operand assembly: the kernel unpacks refs positionally in
     # this exact order (the ``nxt()`` sequence in ``_block_kernel``);
     # the in-place alias map is derived BY NAME below, so adding an
@@ -445,6 +598,16 @@ def block_step(cfg, model, carry, blk, i0, s, n_valid, *,
               ("pms_created", carry.pms_created),
               ("lat_n", carry.lat_samples_n),
               ("lat_l", carry.lat_samples_l)]
+    if fused and cfg.shedder == SHED_PSPICE:
+        inputs += [("ut_tables", model.ut_tables.astype(f32)),
+                   ("ut_bins_f", model.ut_bins.astype(f32))]
+    if fused and cfg.shedder == SHED_PMBL:
+        # One iid-uniform score row per potential fire, drawn from the
+        # chain's subs — bitwise the ``random_drop`` draw the host path
+        # makes for the same fire ordinal.
+        unif = jax.vmap(
+            lambda kk: jax.random.uniform(kk, (P * N,)))(chain_subs)
+        inputs += [("shed_uniforms", unif)]
     if cfg.gather_stats:
         inputs += [("obs_counts", carry.obs_counts),
                    ("obs_rewards", carry.obs_rewards)]
@@ -457,7 +620,7 @@ def block_step(cfg, model, carry, blk, i0, s, n_valid, *,
                ("complex_count", sds((P,), f32)),
                ("pms_created", sds((P,), f32)),
                ("lat_n", sds((S,), f32)), ("lat_l", sds((S,), f32)),
-               ("fscal_out", sds((6,), f32)),
+               ("fscal_out", sds((8,), f32)),
                ("iscal_out", sds((3,), i32)),
                ("l_e", sds((W,), f32)), ("n_pm", sds((W,), f32)),
                ("shed", sds((W,), i32)), ("dropped", sds((W,), i32))]
@@ -498,9 +661,16 @@ def block_step(cfg, model, carry, blk, i0, s, n_valid, *,
         sim_time=fscal_o[0], ebl_frac=fscal_o[1], ema_gap=fscal_o[2],
         prev_arrival=fscal_o[3], overflow=fscal_o[4],
         ebl_dropped=fscal_o[5],
+        pms_shed=fscal_o[6], shed_calls=fscal_o[7],
         complex_count=cplx, pms_created=crtd,
         obs_counts=obs_c, obs_rewards=obs_r,
         lat_samples_n=lat_n, lat_samples_l=lat_l, lat_ptr=iscal_o[2])
     rows = dict(l_e=l_e, n_pm=n_pm, shed=shed != 0, dropped=dropped != 0,
                 match_open=m_open, match_bind=m_bind)
+    if fused:
+        # iscal_o[0] counts in-kernel fires: advance the key down the
+        # precomputed chain and report "nothing left to replay".
+        carry2 = carry2._replace(key=jax.lax.dynamic_index_in_dim(
+            key_chain, iscal_o[0], axis=0, keepdims=False))
+        return carry2, rows, jnp.bool_(False), iscal_o[1]
     return carry2, rows, iscal_o[0] != 0, iscal_o[1]

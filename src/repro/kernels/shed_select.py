@@ -12,6 +12,15 @@ Two kernels replace the sort in Alg. 2 with a histogram-threshold plan
      then a final compare produces the drop mask (exact-ρ tie-break happens
      on the ≤1-bucket remainder).
 
+These are the STANDALONE kernels the per-event ``backend="pallas"``
+path dispatches through ``ops.shed_lowest_threshold``.  The block
+megakernel (kernels/block_step.py) does not call them: its fused fire
+path runs the SAME driver (``shedder.threshold_drop_mask``) and the
+same ``bucket_edges`` inside the block kernel, with the lookup/
+histogram re-expressed over the store-resident columns — one shared
+bucketing expression is what keeps every backend's drop mask bitwise
+identical.
+
 TARGET: TPU.  VALIDATED: interpret=True vs core.shedder oracle (tests/).
 """
 from __future__ import annotations

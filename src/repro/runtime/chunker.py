@@ -38,14 +38,19 @@ GROUP_EVENT_BUDGET = 8192
 def suggested_group_chunks(chunk_size: int) -> int:
     """Default macro-batch size (chunks per dispatch) for a chunk size.
 
-    Chunks below 1024 events group until a dispatch covers
-    ``GROUP_EVENT_BUDGET`` events; larger chunks keep the legacy group of
-    16 (already past the flat part of the curve)."""
+    Chunks below 1024 events group until a dispatch covers at most
+    ``GROUP_EVENT_BUDGET`` events — the budget is a CAP, not a floor: a
+    dispatch must never exceed ~8k events, or per-dispatch peak memory and
+    tail latency grow past what the budget was sized for.  (A floor here
+    was the historical bug: chunk sizes 513–1023 got ``max(16, ...)`` == 16
+    and dispatched up to ~16k events, double the documented budget.)
+    Larger chunks keep the legacy group of 16 (already past the flat part
+    of the curve; those dispatches are intentionally budget-exempt)."""
     if chunk_size <= 0:
         raise ValueError(f"chunk_size must be positive: {chunk_size}")
     if chunk_size >= 1024:
         return 16
-    return max(16, GROUP_EVENT_BUDGET // chunk_size)
+    return max(1, GROUP_EVENT_BUDGET // chunk_size)
 
 
 def _take(x, start: int, stop: int, axis: int):

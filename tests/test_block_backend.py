@@ -193,6 +193,106 @@ class TestBlockRuntimeSurfaces:
         _assert_tree_equal(ox, os_, "sharded block outs")
 
 
+class TestOverloadAxis:
+    """Sustained overload (the paper's regime of interest): a spawn-heavy
+    stream at 1.2/1.4/1.6× service rate with a tight bound, so Algorithm 2
+    fires MANY times per block and the fused in-kernel shed — threshold
+    select, PRNG key chain, shed-cost accounting — is exercised end to
+    end.  Bitwise vs xla for every shedder × W × overload ratio."""
+
+    OVERLOAD = (1.2, 1.4, 1.6)
+
+    @staticmethod
+    def _overload_setup(shedder, mult, n=240):
+        specs = [pat.make_q1(window_size=400, num_symbols=4)]
+        cp = pat.compile_patterns(specs)
+        cfg = runner.default_config(cp, max_pms=37, latency_bound=0.001,
+                                    gather_stats=True, emit_matches=True,
+                                    shedder=shedder, **COST)
+        model = eng.make_model(cp, cfg)
+        rate = mult * 3.0 / (cfg.c_base + cfg.c_match * 0.3 * cfg.max_pms)
+        raw = streams.gen_stock(n, num_symbols=50, pattern_symbols=4,
+                                p_class=0.5, seed=100)
+        ev = streams.classify(specs, raw, rate=rate, seed=0)
+        return cfg, model, ev
+
+    @pytest.mark.parametrize("mult", OVERLOAD)
+    @pytest.mark.parametrize("shedder", SHEDDERS)
+    def test_overload_sweep_bitwise(self, shedder, mult):
+        cfg, model, ev = self._overload_setup(shedder, mult)
+        cx, ox = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        if shedder in (eng.SHED_PSPICE, eng.SHED_PMBL):
+            # >= 8 fires over 240 events: at W=128 (two blocks) some
+            # block necessarily absorbs several fires in one launch, so
+            # the in-kernel key-chain advance past row 0 is exercised.
+            assert float(cx.shed_calls) >= 8, \
+                f"fixture must fire repeatedly, got {float(cx.shed_calls)}"
+        for w in (8, 32, 128):
+            cfg_b = _block(cfg, w)
+            cb, ob = eng.run_engine(cfg_b, model, ev, eng.init_carry(cfg_b))
+            _assert_tree_equal(cx, cb, f"{shedder}/x{mult}/W={w} carry")
+            _assert_tree_equal(ox, ob, f"{shedder}/x{mult}/W={w} outs")
+
+
+class TestReplayLegacyPath:
+    """``block_shed="replay"`` keeps the PR-5 fire/replay driver as the
+    legacy oracle: the kernel bails at the first in-block fire, the host
+    while_loop replays the fired event through ``_step`` and re-enters at
+    ``fire_idx + 1``.  Must stay bitwise with xla (and therefore with the
+    fused path, which is separately pinned to xla above)."""
+
+    @pytest.mark.parametrize("w", (1, 8, 32))
+    @pytest.mark.parametrize("shedder", (eng.SHED_PSPICE, eng.SHED_PMBL))
+    def test_replay_equals_xla(self, shedder, w):
+        """W=1 makes EVERY fire the last valid event of its block — the
+        tail re-entry case (stop = fire_idx, re-entry at
+        fire_idx + 1 == n_valid) — so no zero-width relaunch may occur."""
+        cfg, model, ev = _setup("q1", shedder=shedder)
+        cx, ox = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(cx.shed_calls) > 0
+        cfg_r = dataclasses.replace(_block(cfg, w), block_shed="replay")
+        cr, outs_r = eng.run_engine(cfg_r, model, ev, eng.init_carry(cfg_r))
+        _assert_tree_equal(cx, cr, f"replay/{shedder}/W={w} carry")
+        _assert_tree_equal(ox, outs_r, f"replay/{shedder}/W={w} outs")
+
+    def test_replay_chunked_tail_fire(self):
+        """Ragged chunks × W=1: every block tail is also a chunk tail, so
+        fires landing on the chunk's last valid event exercise the
+        re-entry guard at each chunk-group boundary."""
+        cfg, model, ev = _setup("q1", n=320)
+        cx, _ = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        assert float(cx.shed_calls) > 0
+        cfg_r = dataclasses.replace(_block(cfg, 1), block_shed="replay")
+        carry = eng.init_carry(cfg_r)
+        for start, piece in RT.iter_chunks(ev, 100):
+            carry, _ = eng.run_engine_chunk(cfg_r, model, piece, carry,
+                                            jnp.int32(start))
+        _assert_tree_equal(cx, carry, "replay chunked W=1")
+
+    def test_replay_lanes_per_lane_fire_indices(self):
+        """Vmapped lanes on the replay path: the lanes' streams differ, so
+        their fire indices diverge within the same batched while
+        iteration (non-fired lanes carry the fire_idx = W sentinel).
+        Each lane must still equal its own single-lane xla run."""
+        L = 2
+        models, evs = [], []
+        for lane in range(L):
+            cfg, m, e = _setup("q1", n=256, seed=lane, rate_mult=1.5 + lane)
+            models.append(m)
+            evs.append(e)
+        cfg_r = dataclasses.replace(_block(cfg, 32), block_shed="replay")
+        cL, outsL = RT.run_chunk_lanes(
+            cfg_r, RT.stack(models), RT.stack(evs),
+            RT.init_lane_carries(cfg_r, L), jnp.int32(0))
+        for lane in range(L):
+            cx, ox = eng.run_engine(cfg, models[lane], evs[lane],
+                                    eng.init_carry(cfg, seed=lane))
+            _assert_tree_equal(cx, jax.tree.map(lambda x: x[lane], cL),
+                               f"replay lane {lane} carry")
+            _assert_tree_equal(ox, jax.tree.map(lambda x: x[lane], outsL),
+                               f"replay lane {lane} outs")
+
+
 class TestLazyInversion:
     """The kernel's Algorithm-1 check uses the cond-based f-inverse —
     must be BIT-identical to ``invert_latency`` for both model kinds

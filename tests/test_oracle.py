@@ -221,6 +221,51 @@ class TestDifferentialShedders:
                                       tag)
 
 
+class TestDifferentialSheddersOverload:
+    """The overload axis against the NumPy oracle: spawn-heavy streams at
+    1.2/1.4/1.6× service rate with a tight bound, so Algorithm 2 fires
+    many times per block.  The sort plan is pinned (the oracle implements
+    the literal argsort Algorithm 2), which also routes ``pallas_block``
+    onto the legacy replay driver — the fused kernel requires the
+    threshold plan — so this doubles as the replay path's oracle pin."""
+
+    @staticmethod
+    def _fixture(shedder, mult, seed=0):
+        specs = [pat.make_q1(window_size=400, num_symbols=4)]
+        cp = pat.compile_patterns(specs)
+        cfg = runner.default_config(
+            cp, max_pms=48, latency_bound=0.001, shedder=shedder,
+            emit_matches=True, shed_plan="sort", **COST)
+        model = eng.make_model(cp, cfg)
+        rate = mult * 3.0 / (cfg.c_base + cfg.c_match * 0.3 * cfg.max_pms)
+        raw = streams.gen_stock(300, num_symbols=50, pattern_symbols=4,
+                                p_class=0.5, seed=100 + seed)
+        ev = streams.classify(specs, raw, rate=rate, seed=seed)
+        return cfg, model, ev
+
+    @pytest.mark.parametrize("mult", (1.2, 1.4, 1.6))
+    @pytest.mark.parametrize("shedder", [eng.SHED_PSPICE, eng.SHED_PMBL])
+    def test_overloaded_run_equals_oracle(self, shedder, mult):
+        cfg, model, ev = self._fixture(shedder, mult)
+        o = orc.run_oracle(cfg, model, ev, seed=0)
+        assert o.shed_calls >= 8, \
+            f"fixture must fire repeatedly, got {o.shed_calls}"
+        for backend in (eng.BACKEND_XLA, eng.BACKEND_PALLAS_BLOCK):
+            cfg_b = dataclasses.replace(cfg, backend=backend)
+            carry, outs = eng.run_engine(cfg_b, model, ev,
+                                         eng.init_carry(cfg_b))
+            tag = f"{shedder}/x{mult}/{backend}"
+            assert eng.match_sets(outs) == o.matches, tag
+            assert float(carry.pms_shed) == o.pms_shed, tag
+            assert float(carry.shed_calls) == o.shed_calls, tag
+            np.testing.assert_array_equal(np.asarray(carry.complex_count),
+                                          o.complex_count, tag)
+            np.testing.assert_array_equal(np.asarray(outs.l_e), o.l_e,
+                                          f"{tag} l_e")
+            np.testing.assert_array_equal(np.asarray(outs.shed), o.shed,
+                                          tag)
+
+
 class TestDifferentialProperty:
     """The no-shed equality as a property over generated scenarios."""
 

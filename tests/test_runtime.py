@@ -374,6 +374,32 @@ class TestLongStreamGuards:
         assert np.isfinite(float(f.a)) and float(f.a) > 0
 
 
+class TestChunkerBudget:
+    """suggested_group_chunks: the 8192-event budget is a CAP (regression:
+    chunk sizes 513–1023 used to hit the max(16, ...) floor and dispatch
+    up to ~16k events, double the documented budget)."""
+
+    @pytest.mark.parametrize("chunk,expect", [
+        (256, 32), (512, 16),    # exact divisors of the budget
+        (513, 15), (767, 10), (1023, 8),  # the formerly-broken band
+        (1024, 16), (4096, 16),  # legacy fixed group, budget-exempt
+    ])
+    def test_boundary_sizes(self, chunk, expect):
+        assert RT.chunker.suggested_group_chunks(chunk) == expect
+
+    def test_budget_is_a_cap_below_1024(self):
+        budget = RT.chunker.GROUP_EVENT_BUDGET
+        for chunk in range(1, 1024):
+            g = RT.chunker.suggested_group_chunks(chunk)
+            assert g >= 1
+            assert chunk * g <= budget, \
+                f"chunk={chunk}: dispatch {chunk * g} exceeds budget"
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            RT.chunker.suggested_group_chunks(0)
+
+
 class TestTelemetry:
     def test_chunk_stats_consistent(self, setup):
         _, cfg, model, make_events = setup
@@ -389,6 +415,49 @@ class TestTelemetry:
         assert agg["pms_shed"] == pytest.approx(float(srt.carry.pms_shed))
         assert agg["completions"] == pytest.approx(
             float(np.asarray(srt.carry.complex_count).sum()))
+
+    def test_quantiles_on_very_short_chunks_match_numpy(self, setup):
+        """device_chunk_stats p50/p99 on 1–3 valid events, pinned against
+        NumPy percentiles — the quantile must reduce over exactly the
+        chunk's valid rows, never padding (regression: satellite audit of
+        short-tail chunks)."""
+        from repro.runtime import telemetry as TM
+        _, cfg, model, make_events = setup
+        ev = make_events(0)
+        carry, outs = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        l_e = np.asarray(outs.l_e)
+        for k in (1, 2, 3):
+            piece = jax.tree.map(lambda x: x[:k], outs)
+            vec = np.asarray(TM.device_chunk_stats(piece, carry))
+            np.testing.assert_allclose(
+                vec[TM._VEC["l_e_p50"]], np.percentile(l_e[:k], 50),
+                rtol=1e-6, err_msg=f"p50, k={k}")
+            np.testing.assert_allclose(
+                vec[TM._VEC["l_e_p99"]], np.percentile(l_e[:k], 99),
+                rtol=1e-6, err_msg=f"p99, k={k}")
+            assert vec[TM._VEC["l_e_max"]] == l_e[:k].max()
+
+    def test_grouped_dispatch_and_ragged_tail_quantiles(self, setup):
+        """Grouped dispatches only ever carry FULL chunks (push_region) and
+        the short tail runs as its own piece, so per-chunk p50/p99 must
+        equal NumPy percentiles over each chunk's exact event span — here
+        the tail is 2 events."""
+        from repro.runtime import telemetry as TM  # noqa: F401
+        _, cfg, model, make_events = setup
+        n = 4 * 256 + 2
+        ev = make_events(0, n=n)
+        _, o_mono = eng.run_engine(cfg, model, ev, eng.init_carry(cfg))
+        l_e = np.asarray(o_mono.l_e)
+        srt = RT.StreamRuntime(cfg, model, rt=RT.RuntimeConfig(
+            chunk_size=256, group_chunks=4))
+        stats = srt.push(ev, flush=True)
+        assert [s.n_events for s in stats] == [256] * 4 + [2]
+        for s in stats:
+            span = l_e[s.start:s.start + s.n_events]
+            np.testing.assert_allclose(s.l_e_p50, np.percentile(span, 50),
+                                       rtol=1e-6, err_msg=f"p50@{s.start}")
+            np.testing.assert_allclose(s.l_e_p99, np.percentile(span, 99),
+                                       rtol=1e-6, err_msg=f"p99@{s.start}")
 
 
 class TestDriftingStreams:
