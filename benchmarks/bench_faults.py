@@ -12,6 +12,14 @@ Every cell is SEEDED and deterministic, so CI gates on exact outcomes:
     agrees with the ladder's and guard's own counters);
   * bounded FN degradation: each fault cell keeps at least
     ``1 - FN_BOUND`` of the clean cell's complex-event completions;
+  * ``process_kill``: the one fault the in-process matrix cannot apply —
+    losing the process itself.  The chaos harness (repro.runtime.
+    supervisor) SIGKILLs a persist-enabled subprocess at a seeded
+    mid-chunk point, relaunches it, and the recovered run must end
+    bitwise-identical (carry sha, match sets, counters) to an
+    uninterrupted one.  The full kill-site × backend × shedder grid
+    lives in benchmarks/bench_recovery.py; this cell keeps the fault
+    matrix COMPLETE over ``faults.FAULT_KINDS``.
   * ``disabled_bitwise_<backend>``: with injection and resilience off,
     the chunked runtime stays bitwise-identical to one monolithic
     ``run_engine`` scan on all three backends.
@@ -24,6 +32,7 @@ import argparse
 import json
 import os
 import sys
+import tempfile
 import time
 import traceback
 
@@ -35,6 +44,11 @@ from repro.cep import patterns as pat
 from repro.cep import runner
 from repro.data import streams
 from repro import runtime as RT
+from repro.runtime import supervisor as SV
+
+# In-process faults: everything except process_kill, which needs the
+# subprocess harness below.
+INPROC_FAULTS = RT.STREAM_FAULTS + RT.STATE_FAULTS
 
 COST = dict(c_base=3e-4, c_match=6e-5, c_shed_base=1.5e-4, c_shed_pm=1.5e-6,
             c_ebl=6e-5)
@@ -149,6 +163,45 @@ def run_cell(name: str, kinds: tuple[str, ...], specs, cfg, model, ev,
     return row
 
 
+def run_process_kill_cell(n: int, chunk: int, push: int,
+                          seed: int = 3) -> dict:
+    """The process-death cell: seeded SIGKILL mid-chunk via the chaos
+    harness, restart, recovery must be bitwise vs an uninterrupted run."""
+    row: dict = {"cell": "process_kill", "kinds": list(RT.PROCESS_FAULTS)}
+    try:
+        spec = {"backend": eng.BACKEND_XLA, "shedder": eng.SHED_PSPICE,
+                "n": n, "push": push, "chunk": chunk, "max_pms": 32,
+                "rate_mult": 3.0, "refresh_every": 4, "snapshot_every": 4,
+                "min_observations": 64.0}
+        inj = RT.FaultInjector(RT.FaultConfig(kinds=RT.PROCESS_FAULTS,
+                                              seed=seed))
+        ks = inj.plan_kill("chunk", lo=2, hi=8)
+        row["kill_spec"] = ks.spec()
+        t0 = time.perf_counter()
+        ref = SV.run_service(spec, persist_dir=None)
+        with tempfile.TemporaryDirectory() as d:
+            res = SV.Supervisor(d).run(spec, kill=ks.spec())
+        row["wall_s"] = time.perf_counter() - t0
+        rep = res["report"]
+        row.update(faults_applied=len(inj.log),
+                   completions=rep["counters"].get("completions", 0.0),
+                   replayed_records=rep["recovery"]["replayed_records"],
+                   guard_restores=rep["counters"].get("guard_restores", 0),
+                   max_rung=rep["counters"].get("max_rung", 0),
+                   events_processed=rep["events_processed"])
+        row["ok_no_exception"] = True
+        row["ok_killed"] = res["killed"]
+        row["ok_recovered"] = res["recovered"]
+        row["ok_bitwise"] = (
+            rep["carry_sha"] == ref["carry_sha"]
+            and rep["matches"] == ref["matches"]
+            and rep["counters"] == ref["counters"])
+    except Exception:
+        row["ok_no_exception"] = False
+        row["traceback"] = traceback.format_exc()
+    return row
+
+
 def run_bitwise_cell(backend: str, n: int, chunk: int) -> dict:
     """Resilience OFF + no injection: the chunked runtime must equal one
     monolithic scan bit for bit on this backend."""
@@ -196,8 +249,8 @@ def main(argv=None) -> None:
 
     print("cell,completions,faults,restores,max_rung,gates")
     cells = [("clean", ())]
-    cells += [(k, (k,)) for k in RT.FAULT_KINDS]
-    cells += [("all_faults", RT.FAULT_KINDS)]
+    cells += [(k, (k,)) for k in INPROC_FAULTS]
+    cells += [("all_faults", INPROC_FAULTS)]
     clean_completions = None
     for name, kinds in cells:
         row = run_cell(name, kinds, specs, cfg, model, ev, chunk, push)
@@ -220,6 +273,15 @@ def main(argv=None) -> None:
               f"{row.get('guard_restores', 0)},"
               f"{row.get('max_rung', 0)},"
               f"{'FAIL:' + '+'.join(bad) if bad else 'pass'}")
+
+    row = run_process_kill_cell(n=1536, chunk=128, push=512)
+    bad = _gates(row)
+    out["cells"].append(row)
+    print(f"process_kill,{row.get('completions', 'ERR')},"
+          f"{row.get('faults_applied', 0)},"
+          f"{row.get('guard_restores', 0)},"
+          f"{row.get('max_rung', 0)},"
+          f"{'FAIL:' + '+'.join(bad) if bad else 'pass'}")
 
     for backend in (eng.BACKEND_XLA, eng.BACKEND_PALLAS,
                     eng.BACKEND_PALLAS_BLOCK):

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +31,8 @@ from repro.cep import patterns as pat
 from repro.cep import runner
 from repro.data import streams
 from repro.runtime import lanes as LN
+from repro.runtime import persist as PS
+from repro.runtime import service as RTS
 
 BACKENDS = (eng.BACKEND_XLA, eng.BACKEND_PALLAS, eng.BACKEND_PALLAS_BLOCK)
 SHEDDERS = (eng.SHED_NONE, eng.SHED_PSPICE, eng.SHED_PMBL, eng.SHED_EBL)
@@ -162,6 +165,9 @@ def check_all(quick: bool = False, out: str | None = None) -> dict:
     # ---- retrace guard: execute twice per cell, count compiles ----------
     findings += _retrace_sweep(cfg0, model, ev, quick)
 
+    # ---- durable recovery: zero fresh compiles + clean restored carry ---
+    findings += _persist_sweep(cfg0, model, ev)
+
     rows = [f.row() for f in findings]
     n_fail = sum(not f.ok for f in findings)
     result = {"ok": n_fail == 0, "n_fail": n_fail,
@@ -198,3 +204,47 @@ def _retrace_sweep(cfg0, model, ev, quick: bool) -> list:
             budgets[name] = len(backends) * (ctr.max_compiles or 1)
             measured[name] = cc.compiles(fn)
     return T.retrace_findings(measured, budgets, cell="retrace-sweep")
+
+
+def _persist_sweep(cfg0, model, ev) -> list:
+    """Durable-recovery contract (DESIGN.md §13): a runtime rebuilt from
+    a snapshot + WAL replay must re-enter the SAME chunk executable —
+    zero fresh compiles during recovery and the post-recovery stream —
+    and the restored carry must trace clean through the chunk contract
+    (donation aliasing, no host callbacks, no f64)."""
+    chunk = 32
+
+    def rt_cfg(d):
+        # group_chunks=1 pins the run_engine_chunk path (the entry the
+        # compile counter watches); snapshot on every push.
+        return RTS.RuntimeConfig(chunk_size=chunk, group_chunks=1,
+                                 persist=PS.PersistConfig(
+                                     dir=d, snapshot_every_chunks=1))
+
+    with tempfile.TemporaryDirectory() as d:
+        warm = RTS.StreamRuntime(cfg0, model, rt_cfg(d))
+        warm.push(jax.tree.map(lambda x: x[:2 * chunk].copy(), ev))
+        warm.persist.wal.close()
+
+        entry, ctr = C.registry()["cep.run_engine_chunk"]
+        with T.CompileCounter(entry) as cc:
+            rec = RTS.StreamRuntime(cfg0, model, rt_cfg(d))
+            rec.recover_from_disk()
+            rec.push(jax.tree.map(lambda x: x[2 * chunk:3 * chunk].copy(),
+                                  ev))
+            measured = {"cep.run_engine_chunk[post-recovery]":
+                        cc.compiles(entry)}
+        findings = T.retrace_findings(
+            measured, {"cep.run_engine_chunk[post-recovery]": 0},
+            cell="persist-sweep")
+
+        piece = jax.tree.map(lambda x: x[:chunk].copy(), ev)
+        carry = jax.tree.map(jnp.asarray, rec.carry)
+        art = R.trace_artifact(eng.run_engine_chunk, cfg0, model, piece,
+                               carry, jnp.int32(0),
+                               name=f"run_engine_chunk[{cfg0.backend}/"
+                                    f"{cfg0.shedder}/persist-restored]",
+                               n_events=chunk,
+                               min_alias_pairs=_leaves(carry))
+        findings += _findings_for(art, ctr)
+    return findings

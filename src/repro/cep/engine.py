@@ -1057,6 +1057,37 @@ def merge_carries(stacked: Carry, axis: int = 0) -> Carry:
 
 
 # ---------------------------------------------------------------------------
+# Durable-state manifest (repro.runtime.persist)
+# ---------------------------------------------------------------------------
+
+def pytree_manifest(tree) -> list[dict]:
+    """Leaf schema of a pytree in ``jax.tree_util`` flatten order:
+    ``[{"path", "dtype", "shape"}, ...]``.
+
+    This is the validation half of the durable snapshot codec
+    (``repro.runtime.persist``): a snapshot records the manifest it was
+    written with, and a restore only proceeds when it matches the live
+    tree's manifest — a mismatch means the snapshot belongs to a
+    different config (shapes) or code version (structure) and must be
+    surfaced, never coerced.
+    """
+    out = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        arr = np.asarray(leaf)
+        out.append({"path": jax.tree_util.keystr(path),
+                    "dtype": arr.dtype.str, "shape": list(arr.shape)})
+    return out
+
+
+def carry_manifest(cfg: EngineConfig, seed: int = 0,
+                   lat_capacity: int = 4096) -> list[dict]:
+    """The manifest any durable snapshot of this config's carry must
+    match (``init_carry`` shapes are a pure function of the config)."""
+    return pytree_manifest(init_carry(cfg, seed=seed,
+                                      lat_capacity=lat_capacity))
+
+
+# ---------------------------------------------------------------------------
 # Results summary
 # ---------------------------------------------------------------------------
 

@@ -5,12 +5,18 @@ chunked ingestion with a donated carry (constant-memory unbounded
 streams), online Markov/utility model refresh between chunks, vmapped
 tenant lanes, per-chunk telemetry, and the resilience layer (bounded
 admission front-end, degradation ladder, carry guard/recovery, fault
-injection).  See DESIGN.md §7, §8, §12.
+injection) plus durable crash recovery (versioned snapshots + a
+write-ahead event log, repro.runtime.persist; the process-level chaos
+harness lives in repro.runtime.supervisor).  See DESIGN.md §7, §8,
+§12, §13.
 """
 from repro.runtime.chunker import (ChunkBuffer, concat_events, iter_chunks,
                                    num_events, slice_events)
-from repro.runtime.faults import (FAULT_KINDS, STATE_FAULTS, STREAM_FAULTS,
-                                  FaultConfig, FaultInjector)
+from repro.runtime.faults import (FAULT_KINDS, KILL_ENV, KILL_SITES,
+                                  PROCESS_FAULTS, STATE_FAULTS,
+                                  STREAM_FAULTS, FaultConfig, FaultInjector,
+                                  KillSwitch, install_kill_from_env,
+                                  install_kill_switch, kill_point)
 from repro.runtime.guard import (CARRY_CHECKS, MODEL_CHECKS, CarryGuard,
                                  GuardConfig, GuardViolation,
                                  carry_check_lanes, carry_check_vec,
@@ -22,6 +28,11 @@ from repro.runtime.lanes import (broadcast_model, init_lane_carries,
                                  num_lanes, run_chunk_lanes,
                                  run_chunk_lanes_donated, stack,
                                  unstack_lane)
+from repro.runtime.persist import (CorruptSegmentError,
+                                   CorruptSnapshotError,
+                                   ManifestMismatchError, PersistConfig,
+                                   Persistence, PersistError, SnapshotStore,
+                                   WriteAheadLog, decode_tree, encode_tree)
 from repro.runtime.refresh import (RefreshConfig, RefreshState,
                                    prepare_model, refit_latency_model,
                                    refresh_model, table_width)
@@ -37,8 +48,13 @@ from repro.runtime.telemetry import (ChunkStats, RuntimeEvent, TelemetryLog,
 __all__ = [
     "ChunkBuffer", "concat_events", "iter_chunks", "num_events",
     "slice_events",
-    "FAULT_KINDS", "STATE_FAULTS", "STREAM_FAULTS", "FaultConfig",
-    "FaultInjector",
+    "FAULT_KINDS", "KILL_ENV", "KILL_SITES", "PROCESS_FAULTS",
+    "STATE_FAULTS", "STREAM_FAULTS", "FaultConfig", "FaultInjector",
+    "KillSwitch", "install_kill_from_env", "install_kill_switch",
+    "kill_point",
+    "CorruptSegmentError", "CorruptSnapshotError", "ManifestMismatchError",
+    "PersistConfig", "Persistence", "PersistError", "SnapshotStore",
+    "WriteAheadLog", "decode_tree", "encode_tree",
     "CARRY_CHECKS", "MODEL_CHECKS", "CarryGuard", "GuardConfig",
     "GuardViolation", "carry_check_lanes", "carry_check_vec",
     "model_check_lanes", "model_check_vec", "trim_store",

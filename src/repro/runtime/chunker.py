@@ -107,6 +107,20 @@ class ChunkBuffer:
         return 0 if self._pending is None \
             else num_events(self._pending, self.axis)
 
+    @property
+    def next_start(self) -> int:
+        return self._next_start
+
+    def buffered(self) -> EventBatch | None:
+        """The sub-chunk remainder (None when empty) — what a durable
+        snapshot must carry so a recovered buffer resumes mid-chunk."""
+        return self._pending
+
+    def restore(self, pending: EventBatch | None, next_start: int) -> None:
+        """Reset buffer state from a snapshot (repro.runtime.persist)."""
+        self._pending = pending
+        self._next_start = int(next_start)
+
     def push(self, events: EventBatch) -> list[tuple[int, EventBatch]]:
         start, region, n_chunks = self.push_region(events)
         if n_chunks == 0:

@@ -18,6 +18,8 @@ controller and shedder see, not the data-layer contract.
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +31,19 @@ from repro.runtime.chunker import num_events
 STREAM_FAULTS = ("burst", "duplicate", "reorder", "stall")
 STATE_FAULTS = ("nan_refresh", "table_corrupt", "lane_poison",
                 "latency_spike")
-FAULT_KINDS = STREAM_FAULTS + STATE_FAULTS
+# Process faults kill the WHOLE process (SIGKILL: no handlers, no atexit)
+# at a seeded site — the fault the durable persistence layer exists for
+# (DESIGN.md §13).  They are planned via ``FaultInjector.plan_kill`` and
+# executed by a ``KillSwitch`` armed at the module's kill points.
+PROCESS_FAULTS = ("process_kill",)
+FAULT_KINDS = STREAM_FAULTS + STATE_FAULTS + PROCESS_FAULTS
+
+# Instrumented death sites: after a chunk's device dispatch returns but
+# before its host bookkeeping lands; after the refresh cadence check
+# fires; and inside the snapshot writer (which dies mid-write, leaving a
+# deliberately torn file for recovery to CRC-reject).
+KILL_SITES = ("chunk", "refresh", "snapshot")
+KILL_ENV = "PSPICE_KILL"   # "site:after" spec for subprocess children
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,6 +208,96 @@ class FaultInjector:
             f_model=type(f)(a=bad_a, b=f.b, kind=f.kind))
         self._note("table_corrupt", lane=lane, n_bad=k)
         return model
+
+    # -- process faults ----------------------------------------------------
+    def plan_kill(self, site: str, lo: int = 1, hi: int = 4
+                  ) -> "KillSwitch":
+        """Seeded kill plan: SIGKILL on the Nth hit of ``site`` with
+        N ~ U[lo, hi] drawn from the injector's own rng stream (logged,
+        so the same seed plans the same death)."""
+        if "process_kill" not in self.cfg.kinds:
+            raise ValueError("plan_kill needs 'process_kill' in "
+                             f"FaultConfig.kinds: {self.cfg.kinds}")
+        if lo < 1 or hi < lo:
+            raise ValueError(f"plan_kill needs 1 <= lo <= hi: [{lo},{hi}]")
+        self._call += 1
+        after = int(self.rng.integers(lo, hi + 1))
+        self._note("process_kill", site=site, after=after)
+        return KillSwitch(site, after)
+
+
+class KillSwitch:
+    """Dies by SIGKILL on the Nth hit of one instrumented site.
+
+    Installed per process (``install_kill_switch`` or the ``PSPICE_KILL``
+    env spec, which is how the supervisor arms a child); the runtime's
+    kill points cost one None-check when no switch is armed, so the
+    production path stays untouched.
+    """
+
+    def __init__(self, site: str, after: int):
+        if site not in KILL_SITES:
+            raise ValueError(f"unknown kill site {site!r}; expected one "
+                             f"of {KILL_SITES}")
+        if after < 1:
+            raise ValueError(f"kill after-count must be >= 1: {after}")
+        self.site = site
+        self.after = int(after)
+        self.hits = 0
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "KillSwitch":
+        site, _, after = spec.partition(":")
+        return cls(site, int(after or 1))
+
+    def spec(self) -> str:
+        return f"{self.site}:{self.after}"
+
+    def pending(self, site: str) -> bool:
+        """Count a hit of ``site``; True exactly when it is time to die
+        (callers with pre-death work — the torn snapshot write — check
+        this and then call ``kill``)."""
+        if site != self.site:
+            return False
+        self.hits += 1
+        return self.hits == self.after
+
+    def kill(self) -> None:
+        os.kill(os.getpid(), signal.SIGKILL)
+        os._exit(137)   # unreachable on POSIX; belt and braces
+
+
+_KILL: KillSwitch | None = None
+
+
+def install_kill_switch(ks: KillSwitch | None) -> KillSwitch | None:
+    """Arm (or with None, disarm) the process kill switch; returns the
+    previously armed one."""
+    global _KILL
+    prev, _KILL = _KILL, ks
+    return prev
+
+
+def active_kill_switch() -> KillSwitch | None:
+    return _KILL
+
+
+def install_kill_from_env(environ=os.environ) -> KillSwitch | None:
+    """Arm from the ``PSPICE_KILL=site:after`` env spec if present — the
+    supervisor's channel into its subprocess children."""
+    spec = environ.get(KILL_ENV)
+    if not spec:
+        return None
+    ks = KillSwitch.from_spec(spec)
+    install_kill_switch(ks)
+    return ks
+
+
+def kill_point(site: str) -> None:
+    """Instrumented death site: a no-op unless an armed switch's count
+    expires here, in which case the process dies by SIGKILL NOW."""
+    if _KILL is not None and _KILL.pending(site):
+        _KILL.kill()
 
 
 def _take_rows(ev: eng.EventBatch, idx: np.ndarray,

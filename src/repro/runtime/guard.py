@@ -149,7 +149,12 @@ class CarryGuard:
     def __init__(self, cfg: GuardConfig, lanes: int | None = None):
         self.cfg = cfg
         self.lanes = lanes
-        self._ckpt: tuple | None = None   # (carry_np, model_np, chunk_i)
+        # (carry_np, model_np, chunk_i, control) — ``control`` is the
+        # runtime's host-side control state in the durable snapshot
+        # codec's JSON form (repro.runtime.persist), captured at save so
+        # a restore rewinds the ladder rung/streaks and admission state
+        # along with the arrays, not just the pytrees.
+        self._ckpt: tuple | None = None
         self.checks_run = 0
         self.violations = 0
         self.restores = 0
@@ -163,10 +168,27 @@ class CarryGuard:
     def checkpoint_chunk(self) -> int | None:
         return None if self._ckpt is None else self._ckpt[2]
 
+    @property
+    def checkpoint_control(self) -> dict | None:
+        return None if self._ckpt is None else self._ckpt[3]
+
+    @property
+    def checkpoint(self) -> tuple | None:
+        """(carry_np, model_np, chunk_i, control) — read by the durable
+        snapshot so a recovered process keeps its last good rollback."""
+        return self._ckpt
+
     def save(self, carry: eng.Carry, model: eng.EngineModel,
-             chunk_i: int) -> None:
-        self._ckpt = (_host_copy(carry), _host_copy(model), chunk_i)
+             chunk_i: int, control: dict | None = None) -> None:
+        self._ckpt = (_host_copy(carry), _host_copy(model), int(chunk_i),
+                      control)
         self.checkpoints += 1
+
+    def load_checkpoint(self, carry_np, model_np, chunk_i: int,
+                        control: dict | None) -> None:
+        """Install an externally decoded checkpoint (snapshot recovery);
+        does NOT count as a new checkpoint."""
+        self._ckpt = (carry_np, model_np, int(chunk_i), control)
 
     def check(self, carry: eng.Carry,
               model: eng.EngineModel) -> list[GuardViolation]:
@@ -206,7 +228,7 @@ class CarryGuard:
         if self._ckpt is None:
             raise RuntimeError("CarryGuard.restore called before any "
                                "checkpoint was saved")
-        ck_carry, ck_model, _ = self._ckpt
+        ck_carry, ck_model = self._ckpt[0], self._ckpt[1]
         self.restores += 1
         if lanes is None or self.lanes is None:
             return _to_device(ck_carry), _to_device(ck_model)
@@ -224,3 +246,10 @@ class CarryGuard:
                 "violations": self.violations,
                 "restores": self.restores,
                 "checkpoints": self.checkpoints}
+
+    def restore_counters(self, d: dict) -> None:
+        """Reload the forensic counters from a durable snapshot."""
+        self.checks_run = int(d["checks_run"])
+        self.violations = int(d["violations"])
+        self.restores = int(d["restores"])
+        self.checkpoints = int(d["checkpoints"])

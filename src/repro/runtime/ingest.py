@@ -239,6 +239,51 @@ class IngestQueue:
         self._depth = 0
         return n
 
+    # -- durable state (repro.runtime.persist) -----------------------------
+    def control_state(self) -> dict:
+        """JSON control state: everything a bitwise-identical replay of
+        future offers needs — bucket tokens + arrival clock, watermark
+        latch, forced drop, the PRNG key, and the counters.  (Queued
+        EVENTS travel separately as a snapshot array section; the
+        ``reports`` list is in-memory forensics and is not restored.)"""
+        return {"tokens": self._tokens, "clock": self._clock,
+                "shedding": self._shedding,
+                "forced_drop": float(self.forced_drop),
+                "key": np.asarray(self._key).tolist(),
+                "totals": [self.total_offered, self.total_admitted,
+                           self.total_shed, self.total_rejected]}
+
+    def restore_control_state(self, d: dict) -> None:
+        self._tokens = float(d["tokens"])
+        self._clock = None if d["clock"] is None else float(d["clock"])
+        self._shedding = bool(d["shedding"])
+        self.forced_drop = float(d["forced_drop"])
+        self._key = jnp.asarray(np.asarray(d["key"], dtype=np.uint32))
+        (self.total_offered, self.total_admitted, self.total_shed,
+         self.total_rejected) = (int(x) for x in d["totals"])
+
+    def queued_events(self) -> EventBatch | None:
+        """Everything queued as ONE batch (arrival order), or None."""
+        if self._depth == 0:
+            return None
+        batches = list(self._queue)
+        out = batches[0]
+        for b in batches[1:]:
+            out = chunker.concat_events(out, b, self.axis)
+        return out
+
+    def restore_queued(self, events: EventBatch | None) -> None:
+        """Reset the queue contents from a snapshot section.  A single
+        concatenated batch dequeues identically to the original deque
+        (``take`` slices across batch boundaries anyway)."""
+        self._queue.clear()
+        self._depth = 0
+        if events is not None:
+            n = chunker.num_events(events, self.axis)
+            if n:
+                self._queue.append(events)
+                self._depth = n
+
 
 class IngestFrontEnd:
     """Per-lane ``IngestQueue`` set for ``MultiTenantRuntime``.
@@ -343,6 +388,20 @@ class IngestFrontEnd:
             if batches[lane] is None:
                 batches[lane] = neutral_like(ref)
         return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+    # -- durable state (repro.runtime.persist) -----------------------------
+    def control_state(self) -> dict:
+        """Per-lane queue control + the quarantine map; queued events per
+        lane travel as separate snapshot sections keyed by lane index."""
+        return {"lanes": [q.control_state() for q in self.queues],
+                "quarantine": {str(k): int(v)
+                               for k, v in self._quarantine.items()}}
+
+    def restore_control_state(self, d: dict) -> None:
+        for q, qd in zip(self.queues, d["lanes"]):
+            q.restore_control_state(qd)
+        self._quarantine = {int(k): int(v)
+                            for k, v in d["quarantine"].items()}
 
     @staticmethod
     def _pad_neutral(events: EventBatch, k: int) -> EventBatch:

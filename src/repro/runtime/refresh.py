@@ -50,6 +50,31 @@ class RefreshState:
     skipped_obs: int = 0
     skipped_nonfinite: int = 0   # NaN-safe gate fired (DESIGN.md §12)
 
+    def to_control(self) -> dict:
+        """JSON control form for the durable snapshot codec.  float32 →
+        Python float → float32 is exact (repr round-trip), so the drift
+        gate computes the same MSE after recovery."""
+        lt = None
+        if self.last_T is not None:
+            lt = {"dtype": self.last_T.dtype.str,
+                  "shape": list(self.last_T.shape),
+                  "data": self.last_T.reshape(-1).tolist()}
+        return {"last_T": lt, "refresh_count": self.refresh_count,
+                "skipped_drift": self.skipped_drift,
+                "skipped_obs": self.skipped_obs,
+                "skipped_nonfinite": self.skipped_nonfinite}
+
+    @classmethod
+    def from_control(cls, d: dict) -> "RefreshState":
+        lt = d["last_T"]
+        arr = None if lt is None else np.asarray(
+            lt["data"], dtype=np.dtype(lt["dtype"])).reshape(lt["shape"])
+        return cls(last_T=arr,
+                   refresh_count=int(d["refresh_count"]),
+                   skipped_drift=int(d["skipped_drift"]),
+                   skipped_obs=int(d["skipped_obs"]),
+                   skipped_nonfinite=int(d["skipped_nonfinite"]))
+
 
 def table_width(specs: Sequence[pat.PatternSpec], bin_size: int) -> int:
     """Bins a refreshed utility table will occupy: max ceil(ws/bs)."""

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 from typing import Sequence
 
@@ -29,8 +30,9 @@ import numpy as np
 from repro.analysis import contracts as ctr
 from repro.cep import engine as eng
 from repro.cep import patterns as pat
-from repro.runtime import chunker, guard as GD, ingest as IG, lanes as LN, \
-    refresh as RF, telemetry as TM
+from repro.runtime import chunker, faults as FT, guard as GD, \
+    ingest as IG, lanes as LN, persist as PS, refresh as RF, \
+    telemetry as TM
 
 # Degradation-ladder rungs (DESIGN.md §12), least to most drastic.  Rung 1
 # is the paper's own mechanism (pSPICE PM shedding, always armed) made
@@ -131,6 +133,22 @@ class DegradationLadder:
                               "quarantine_timeout")
         return None
 
+    # -- durable state (repro.runtime.persist) -----------------------------
+    def control_state(self) -> dict:
+        """Rung + hysteresis streaks — what a checkpoint rewind restores.
+        The ``transitions`` log is append-only forensics (mirrored into
+        telemetry) and travels only with FULL snapshots, never with
+        in-memory guard rewinds — rewinding one side of the mirror would
+        break the ladder/telemetry count invariant CI gates on."""
+        return {"rung": self.rung, "bad": self._bad, "good": self._good,
+                "q_ticks": self._q_ticks}
+
+    def restore_control_state(self, d: dict) -> None:
+        self.rung = int(d["rung"])
+        self._bad = int(d["bad"])
+        self._good = int(d["good"])
+        self._q_ticks = int(d["q_ticks"])
+
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeConfig:
@@ -155,6 +173,10 @@ class RuntimeConfig:
     ingest: IG.IngestConfig | None = None    # bounded admission front-end
     ladder: LadderConfig | None = None       # degradation state machine
     guard: GD.GuardConfig | None = None      # invariant checks + restore
+    # Durable persistence (DESIGN.md §13): snapshot + write-ahead log
+    # under one directory.  Like the resilience knobs, None means the
+    # pre-persistence code path bit for bit.
+    persist: PS.PersistConfig | None = None
 
     def __post_init__(self):
         if self.chunk_size < 1:
@@ -273,8 +295,14 @@ class StreamRuntime:
         self._quarantined = False
         self._event_cursor = 0       # global index after the last chunk
         self.quarantine_dropped = 0  # events refused while quarantined
+        self.persist = PS.Persistence(rt.persist) \
+            if rt.persist is not None else None
+        self._last_snap_chunk = 0
+        self._replaying = False         # True while re-pushing WAL records
+        self._replay_cursor: int | None = None  # next unabsorbed record id
         if self.guard is not None:
-            self.guard.save(self.carry, self.model, chunk_i=0)
+            self.guard.save(self.carry, self.model, chunk_i=0,
+                            control=self._control_state(scope="guard"))
 
     def _make_ingest(self):
         return IG.IngestQueue(self.rt.ingest)
@@ -347,15 +375,24 @@ class StreamRuntime:
                 self._guard_restore(viols)
         elif self._chunk_i % gcfg.checkpoint_every_chunks == 0:
             # Check-then-save: a poisoned state is never checkpointed.
-            self.guard.save(self.carry, self.model, self._chunk_i)
+            self.guard.save(self.carry, self.model, self._chunk_i,
+                            control=self._control_state(scope="guard"))
 
     def _guard_restore(self, viols: list[GD.GuardViolation]) -> None:
         self.carry, self.model = self.guard.restore(self.carry, self.model)
         # Restore REWINDS the carry counters — the cached snapshot is
         # stale; drop it so the next chunk re-baselines from the carry.
         self._snapshot = None
+        # Rewind the control state captured WITH the checkpoint: ladder
+        # rung/streaks, admission tokens/clock/latch/PRNG, quarantine
+        # counters — otherwise a restore resumes the arrays at the
+        # checkpoint but the controllers at their post-fault values.
+        ctl = self.guard.checkpoint_control
+        if ctl is not None:
+            self._restore_control_state(ctl, scope="guard")
         self.telemetry.record_event("guard_restore", self._chunk_i, {
             "from_chunk": self.guard.checkpoint_chunk,
+            "rung": None if self.ladder is None else self.ladder.rung,
             "lanes": sorted({v.lane for v in viols
                              if v.lane is not None}) or None})
 
@@ -374,6 +411,201 @@ class StreamRuntime:
                 self._guard_restore(viols)
         return viols
 
+    # -- durable persistence (DESIGN.md §13) --------------------------------
+    def _persist_extra(self) -> dict:
+        """Subclass hook: JSON-able extras carried inside every durable
+        snapshot (the supervisor's match accumulator rides here)."""
+        return {}
+
+    def _persist_restore_extra(self, extra: dict) -> None:
+        """Subclass hook: inverse of ``_persist_extra``."""
+
+    def _persist_queues(self) -> list:
+        """(lane, IngestQueue) pairs whose queued events + control state
+        the snapshot must carry; [] without an ingest front-end."""
+        if self.ingest is None:
+            return []
+        queues = getattr(self.ingest, "queues", None)
+        return list(enumerate(queues)) if queues is not None \
+            else [(0, self.ingest)]
+
+    def _control_state(self, scope: str = "full") -> dict:
+        """Host-side control state in the snapshot codec's JSON form.
+
+        ``scope="guard"`` keeps the subset an in-memory guard restore
+        rewinds (ladder rung/streaks, admission control state, quarantine
+        counters); ``scope="full"`` adds stream cursors, refresh state,
+        telemetry and the forensic logs for the durable snapshot.
+        """
+        d: dict = {"quarantine_dropped": int(self.quarantine_dropped)}
+        if self.ladder is not None:
+            d["ladder"] = self.ladder.control_state()
+        if self.ingest is not None:
+            d["ingest"] = self.ingest.control_state()
+        if scope != "full":
+            return d
+        d["chunk_i"] = int(self._chunk_i)
+        d["event_cursor"] = int(self._event_cursor)
+        d["events_processed"] = int(self.events_processed)
+        d["counter_snapshot"] = self._snapshot
+        d["buf_next_start"] = int(self._buf.next_start)
+        d["telemetry"] = self.telemetry.to_json()
+        d["extra"] = self._persist_extra()
+        if self.ladder is not None:
+            d["ladder"]["transitions"] = [dict(t) for t in
+                                          self.ladder.transitions]
+        states = self.refresh_state if isinstance(self.refresh_state, list) \
+            else [self.refresh_state]
+        d["refresh"] = [s.to_control() for s in states]
+        if self.guard is not None:
+            d["guard_counters"] = self.guard.counters()
+        return d
+
+    def _restore_control_state(self, d: dict, scope: str = "full") -> None:
+        self.quarantine_dropped = int(d.get("quarantine_dropped", 0))
+        if self.ladder is not None and "ladder" in d:
+            self.ladder.restore_control_state(d["ladder"])
+            if scope == "full" and "transitions" in d["ladder"]:
+                self.ladder.transitions = [dict(t) for t in
+                                           d["ladder"]["transitions"]]
+            # Re-derive the restored rung's standing effects (what
+            # _apply_ladder does on a transition).
+            rung = self.ladder.rung
+            if self.ingest is not None:
+                self.ingest.forced_drop = self.rt.ladder.input_shed_frac \
+                    if rung >= RUNG_INPUT_SHED else 0.0
+            self._quarantined = rung >= RUNG_QUARANTINE
+        if self.ingest is not None and "ingest" in d:
+            self.ingest.restore_control_state(d["ingest"])
+        if scope != "full":
+            return
+        self._chunk_i = int(d["chunk_i"])
+        self._event_cursor = int(d["event_cursor"])
+        self.events_processed = int(d["events_processed"])
+        self._snapshot = d["counter_snapshot"]
+        self.telemetry = TM.TelemetryLog.from_json(d["telemetry"])
+        states = [RF.RefreshState.from_control(s) for s in d["refresh"]]
+        if isinstance(self.refresh_state, list):
+            self.refresh_state = states
+        else:
+            self.refresh_state = states[0]
+        if self.guard is not None and "guard_counters" in d:
+            self.guard.restore_counters(d["guard_counters"])
+        self._persist_restore_extra(d.get("extra", {}))
+
+    def _maybe_snapshot(self) -> bool:
+        if self._chunk_i - self._last_snap_chunk \
+                < self.rt.persist.snapshot_every_chunks:
+            return False
+        self.snapshot_now()
+        return True
+
+    def snapshot_now(self) -> str:
+        """Write one durable snapshot generation (atomic + CRC, rotated;
+        repro.runtime.persist).  Returns the file path."""
+        if self.persist is None:
+            raise ValueError("snapshot_now needs rt.persist "
+                             "(PersistConfig)")
+        control = self._control_state("full")
+        # First WAL record NOT absorbed into this snapshot: during normal
+        # operation every appended record has been pushed; during replay
+        # the cursor tracks the record being re-pushed, so a snapshot cut
+        # mid-recovery is itself a correct recovery point.
+        control["wal_next_record"] = int(
+            self._replay_cursor if self._replay_cursor is not None
+            else self.persist.wal.next_record_id)
+        sections: dict = {"carry": self.carry, "model": self.model,
+                          "pending": self._buf.buffered()}
+        for lane, q in self._persist_queues():
+            sections[f"ingest_queue_{lane}"] = q.queued_events()
+        if self.guard is not None and self.guard.has_checkpoint:
+            ck_carry, ck_model, ck_chunk, ck_ctl = self.guard.checkpoint
+            sections["guard_carry"] = ck_carry
+            sections["guard_model"] = ck_model
+            control["guard_ckpt"] = {"chunk": int(ck_chunk),
+                                     "control": ck_ctl}
+        path = self.persist.store.save(self._chunk_i, control, sections)
+        self._last_snap_chunk = self._chunk_i
+        return path
+
+    def recover_from_disk(self) -> dict:
+        """Restore the newest valid snapshot generation, then replay the
+        WAL tail through the normal push path (DESIGN.md §13).
+
+        Because admission, shedding, refresh and chunk grouping are all
+        driven by event content and seeded PRNG chains — never wall
+        clock — the recovered state is bitwise-identical to the
+        uninterrupted run.  With an empty directory this is a no-op
+        returning a zero report, so a fresh start and a recovery share
+        one entry point.  Returns the recovery report (also embedded in
+        the supervisor's final report).
+        """
+        if self.persist is None:
+            raise ValueError("recover_from_disk needs rt.persist "
+                             "(PersistConfig)")
+        t0 = time.perf_counter()
+        header, sections, meta = self.persist.store.load_latest()
+        start_id, snap_chunk = 0, None
+        if header is not None:
+            self._apply_snapshot(header, sections)
+            start_id = int(header["control"]["wal_next_record"])
+            snap_chunk = int(header["chunk_index"])
+        records = self.persist.wal.records_since(start_id)
+        self._replaying = True
+        try:
+            for rid, ev in records:
+                self._replay_cursor = rid + 1
+                self._ingest_events(jax.tree.map(jnp.asarray, ev))
+                self._maybe_snapshot()
+        finally:
+            self._replaying = False
+            self._replay_cursor = None
+        return {
+            "snapshot_chunk": snap_chunk,
+            "snapshot_path": None if meta["path"] is None
+            else os.path.basename(meta["path"]),
+            "rejected_snapshots": meta["rejected"],
+            "wal_start_record": int(start_id),
+            "replayed_records": len(records),
+            "recovery_wall_s": time.perf_counter() - t0,
+        }
+
+    def _apply_snapshot(self, header: dict, sections: dict) -> None:
+        to_dev = functools.partial(jax.tree.map, jnp.asarray)
+        self.carry = to_dev(PS.decode_tree(*sections["carry"], self.carry,
+                                           what="carry"))
+        self.model = to_dev(PS.decode_tree(*sections["model"], self.model,
+                                           what="model"))
+        ctl = header["control"]
+        tmpl = PS.event_template()
+        pend = None
+        if "pending" in sections:
+            pend = to_dev(PS.decode_tree(*sections["pending"], tmpl,
+                                         what="pending", strict=False))
+        self._buf.restore(pend, ctl["buf_next_start"])
+        for lane, q in self._persist_queues():
+            key = f"ingest_queue_{lane}"
+            batch = None
+            if key in sections:
+                batch = to_dev(PS.decode_tree(*sections[key], tmpl,
+                                              what=key, strict=False))
+            q.restore_queued(batch)
+        self._restore_control_state(ctl, scope="full")
+        self._last_snap_chunk = self._chunk_i
+        if self.guard is not None:
+            if "guard_ckpt" in ctl and "guard_carry" in sections:
+                gc = PS.decode_tree(*sections["guard_carry"], self.carry,
+                                    what="guard_carry")
+                gm = PS.decode_tree(*sections["guard_model"], self.model,
+                                    what="guard_model")
+                self.guard.load_checkpoint(
+                    jax.tree.map(np.array, gc), jax.tree.map(np.array, gm),
+                    ctl["guard_ckpt"]["chunk"],
+                    ctl["guard_ckpt"]["control"])
+            else:
+                self.guard.save(self.carry, self.model, self._chunk_i,
+                                control=self._control_state(scope="guard"))
+
     # -- chunk execution (overridden by the lane runtime) -------------------
     def _run(self, chunk: eng.EventBatch, start: int):
         return eng.run_engine_chunk(self.cfg, self.model, chunk, self.carry,
@@ -387,6 +619,7 @@ class StreamRuntime:
         if not self._refresh_on() \
            or self._chunk_i % self.rt.refresh.every_chunks != 0:
             return False
+        FT.kill_point("refresh")
         self.model, self.carry, did = RF.refresh_model(
             self.specs, self.cfg, self.model, self.carry, self.rt.refresh,
             self.refresh_state)
@@ -406,10 +639,19 @@ class StreamRuntime:
         With an ingest front-end (``rt.ingest``) events pass admission
         control first — the admitted subset queues, and up to
         ``pump_chunks`` chunks drain into execution per push.  While
-        quarantined (ladder rung 3) pushes are refused outright."""
+        quarantined (ladder rung 3) pushes are refused outright.
+
+        With ``rt.persist`` the batch is appended (and flushed) to the
+        write-ahead log BEFORE any processing — admission included — so
+        a crash mid-push replays the whole push through this same path
+        and re-derives every decision (DESIGN.md §13)."""
+        if self.persist is not None and not self._replaying:
+            self.persist.wal.append(events)
         stats = self._ingest_events(events)
         if flush:
             stats += self.flush()
+        if self.persist is not None and not self._replaying:
+            self._maybe_snapshot()
         return stats
 
     def _ingest_events(self, events: eng.EventBatch) -> list[TM.ChunkStats]:
@@ -502,6 +744,7 @@ class StreamRuntime:
         self.carry, vecs = self._run_grouped(piece, start, g)
         vecs = np.asarray(vecs)                # ONE transfer for g chunks
         wall = time.perf_counter() - t0
+        FT.kill_point("chunk")
         out = []
         for b in range(g):
             self._chunk_i += 1
@@ -537,6 +780,7 @@ class StreamRuntime:
         self.carry, outs = self._run(chunk, start)
         vec = np.asarray(TM.device_chunk_stats(outs, self.carry))
         wall = time.perf_counter() - t0
+        FT.kill_point("chunk")
         self._chunk_i += 1
         t1 = time.perf_counter()
         refreshed = self._maybe_refresh()
@@ -605,6 +849,15 @@ class MultiTenantRuntime(StreamRuntime):
                 purged = self.ingest.quarantine_lane(
                     lane, self.rt.guard.quarantine_offers)
                 self.quarantine_dropped += purged
+        # Rewind the poisoned lanes' admission state (token bucket,
+        # watermark latches) to the checkpoint alongside their arrays.
+        ctl = self.guard.checkpoint_control
+        lanes_ctl = None if ctl is None \
+            else ctl.get("ingest", {}).get("lanes")
+        if lanes_ctl is not None and self.ingest is not None:
+            for lane in lanes_bad:
+                self.ingest.queues[lane].restore_control_state(
+                    lanes_ctl[lane])
         self.telemetry.record_event("guard_restore", self._chunk_i, {
             "from_chunk": self.guard.checkpoint_chunk,
             "lanes": lanes_bad})
@@ -638,6 +891,7 @@ class MultiTenantRuntime(StreamRuntime):
         if not self._refresh_on() \
            or self._chunk_i % self.rt.refresh.every_chunks != 0:
             return False
+        FT.kill_point("refresh")
         models, carries, did = [], [], False
         for lane in range(self.num_lanes):
             m, c, d = RF.refresh_model(

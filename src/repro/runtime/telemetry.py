@@ -171,6 +171,23 @@ class TelemetryLog:
     def event_rows(self) -> list[dict]:
         return [e.to_row() for e in self.events]
 
+    def to_json(self) -> dict:
+        """JSON-able forensic dump: chunk rows + runtime events + the
+        aggregate.  Rides inside every durable snapshot
+        (repro.runtime.persist) and in the supervisor's dump-on-recovery
+        hook, so post-crash telemetry survives the process."""
+        return {"chunks": self.rows(), "events": self.event_rows(),
+                "aggregate": self.aggregate()}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TelemetryLog":
+        """Rebuild a log from ``to_json`` output (the aggregate is
+        recomputed from the rows, never trusted)."""
+        log = cls()
+        log.chunks = [ChunkStats(**row) for row in d.get("chunks", [])]
+        log.events = [RuntimeEvent(**row) for row in d.get("events", [])]
+        return log
+
     def aggregate(self) -> dict:
         if not self.chunks:
             return {"n_chunks": 0, "n_events": 0, "events_per_s": 0.0}
